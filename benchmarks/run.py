@@ -1,0 +1,172 @@
+"""Benchmark harness: one function per paper table/figure + framework
+benchmarks (kernels, roofline, serving, compression).
+
+Prints ``name,us_per_call,derived`` CSV.  The paper-analogue set trains the
+five pendigits MLP structures (surrogate data, DESIGN.md 6); framework
+benchmarks read the dry-run ledger and time the Pallas kernels (interpret
+mode on CPU — correctness-representative, not TPU wall-clock; the roofline
+section is the TPU performance statement).
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--only substring] [--skip-paper]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def bench_kernels():
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import csd_matvec, qmatmul, csd_expand
+    rng = np.random.default_rng(0)
+    rows = []
+    for (M, K, N) in [(256, 512, 256), (512, 1024, 512)]:
+        x = jnp.asarray(rng.integers(-128, 128, (M, K)), jnp.int8)
+        w = jnp.asarray(rng.integers(-128, 128, (K, N)), jnp.int8)
+        e = jnp.asarray(rng.integers(0, 12, (N,)), jnp.int32)
+        qmatmul(x, w, e).block_until_ready()
+        t0 = time.time()
+        for _ in range(3):
+            qmatmul(x, w, e).block_until_ready()
+        us = (time.time() - t0) / 3 * 1e6
+        gops = 2 * M * K * N / (us / 1e6) / 1e9
+        rows.append((f"kernels/qmatmul/{M}x{K}x{N}", us,
+                     f"interpret_gops={gops:.2f}"))
+    W = rng.integers(-255, 256, (16, 128))
+    planes = jnp.asarray(csd_expand(W))
+    x = jnp.asarray(rng.integers(-128, 128, (512, 16)), jnp.int32)
+    csd_matvec(x, planes=planes).block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        csd_matvec(x, planes=planes).block_until_ready()
+    us = (time.time() - t0) / 3 * 1e6
+    rows.append(("kernels/csd_matvec/512x16x128", us,
+                 f"digit_planes={planes.shape[0]}"))
+    return rows
+
+
+def bench_roofline():
+    """Summarize the dry-run ledger (produced by repro.launch.dryrun)."""
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "experiments", "dryrun.jsonl")
+    if not os.path.exists(path):
+        return [("roofline/missing", 0.0,
+                 "run: python -m repro.launch.dryrun --all --both-meshes --probe")]
+    rows = []
+    best = {}
+    for line in open(path):
+        r = json.loads(line)
+        if "error" in r or r.get("mesh") != "16x16":
+            continue
+        rf = r["roofline"]
+        key = f"roofline/{r['arch']}/{r['shape']}"
+        best[key] = (max(rf["compute_s"], rf["memory_s"],
+                         rf["collective_s"]) * 1e6,
+                     f"dominant={rf['dominant']};frac={rf['roofline_fraction']:.3f};"
+                     f"compute_s={rf['compute_s']:.4f};memory_s={rf['memory_s']:.4f};"
+                     f"coll_s={rf['collective_s']:.4f}")
+    for k in sorted(best):
+        rows.append((k, best[k][0], best[k][1]))
+    return rows
+
+
+def bench_serving():
+    import dataclasses
+    import numpy as np
+    from repro.nn import Model, get_config
+    from repro.runtime.serve import Request, ServeEngine
+    import jax
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              n_layers=2, vocab=256, remat=False)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rows = []
+    for quant in (False, True):
+        eng = ServeEngine(cfg, params, max_batch=4, max_context=64,
+                          eos_id=-1, quantized=quant)
+        reqs = [Request(rid=i, prompt=np.arange(8, dtype=np.int32),
+                        max_new_tokens=8) for i in range(4)]
+        t0 = time.time()
+        eng.run(reqs)
+        dt = time.time() - t0
+        tps = eng.stats["decode_tokens"] / max(eng.stats["decode_s"], 1e-9)
+        rows.append((f"serving/{'int8pot' if quant else 'bf16'}", dt * 1e6,
+                     f"decode_tok_s={tps:.1f};"
+                     f"prefill_tok={eng.stats['prefill_tokens']}"))
+    return rows
+
+
+def bench_compression():
+    import jax
+    import jax.numpy as jnp
+    from repro.optim.compress import pot_quantize_dequantize
+    g = jax.random.normal(jax.random.PRNGKey(0), (1 << 20,)) * 1e-2
+    t0 = time.time()
+    gq = pot_quantize_dequantize(g).block_until_ready()
+    us = (time.time() - t0) * 1e6
+    rel = float(jnp.abs(gq - g).max() / jnp.abs(g).max())
+    return [("compression/int8pot/1M", us,
+             f"rel_err={rel:.4f};wire_bytes_ratio=0.25")]
+
+
+def bench_ptq_decode():
+    """The paper's technique on the decode roofline: weight-sweep bytes per
+    decode step, bf16 vs int8-PoT (per chip, 16x16 mesh TP: params/16)."""
+    from repro.nn.types import get_config, list_configs
+    rows = []
+    for arch in list_configs():
+        cfg = get_config(arch)
+        n = cfg.active_params_count()
+        bf16 = 2 * n / 256
+        int8 = 1 * n / 256
+        t_bf16 = bf16 * 16 / 819e9   # TP-16: each chip reads its 1/16 shard
+        t_int8 = int8 * 16 / 819e9
+        rows.append((f"ptq_decode/{arch}", t_bf16 * 1e6,
+                     f"bf16_ms={t_bf16*1e3:.3f};int8pot_ms={t_int8*1e3:.3f};"
+                     f"saving=2.0x"))
+    return rows
+
+
+SECTIONS = {
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+    "serving": bench_serving,
+    "compression": bench_compression,
+    "ptq_decode": bench_ptq_decode,
+}
+
+
+def paper_sections():
+    from benchmarks import paper_tables as pt
+    return {"table1": pt.table1, "tables2-4": pt.tables2_4,
+            "figs": pt.figs10_18}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-paper", action="store_true",
+                    help="skip the (training-heavy) paper tables")
+    args = ap.parse_args(argv)
+    sections = dict(SECTIONS)
+    if not args.skip_paper:
+        sections.update(paper_sections())
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row in fn():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Quickstart: the paper's full pipeline on one MLP, in ~a minute.
+
+Train a 16-10-10 ANN on the pendigits surrogate with ZAAL, find the minimum
+quantization value (Section IV-A), tune the integer weights for the parallel
+architecture (IV-B), compare design costs across the three architectures
+(Section III) and the multiplierless styles (Section V), and let SIMURG emit
+the Verilog (Section VI).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (find_min_q, quantize_inputs, simurg, tune_parallel,
+                        tune_time_multiplexed, hardware_accuracy)
+from repro.core.archs import design_cost
+from repro.core.csd import tnzd
+from repro.data import pendigits
+from repro.train.zaal import TrainConfig, train
+
+
+def main():
+    print("== 1. train (ZAAL, htanh/sigmoid) ==")
+    ds = pendigits.load()
+    (xtr, ytr), (xval, yval) = ds.validation_split()
+    cfg = TrainConfig(structure=(16, 10, 10), epochs=40)
+    res = train(cfg, pendigits.to_unit(xtr), ytr,
+                pendigits.to_unit(xval), yval)
+    print(f"   float: train={res.train_acc:.1f}% val={res.val_acc:.1f}%")
+
+    print("== 2. minimum quantization value (paper IV-A) ==")
+    hw_acts = ("htanh", "htanh", "hsig")
+    xval_int = quantize_inputs(pendigits.to_unit(xval))
+    xte_int = quantize_inputs(pendigits.to_unit(ds.x_test))
+    qr = find_min_q(res.weights, res.biases, hw_acts, xval_int, yval)
+    print(f"   q={qr.q}  hw-val-acc={qr.ha:.2f}%  "
+          f"history={[(q, round(h,1)) for q, h in qr.history]}")
+    print(f"   tnzd={tnzd(qr.mlp.weights + qr.mlp.biases)}  "
+          f"hw-test-acc={hardware_accuracy(qr.mlp, xte_int, ds.y_test):.2f}%")
+
+    print("== 3. post-training weight tuning (paper IV-B/IV-C) ==")
+    tp = tune_parallel(qr.mlp, xval_int, yval, max_sweeps=4)
+    print(f"   parallel: bha={tp.bha:.2f}% repl={tp.replacements} "
+          f"tnzd={tnzd(tp.mlp.weights + tp.mlp.biases)} "
+          f"hw-test={hardware_accuracy(tp.mlp, xte_int, ds.y_test):.2f}%")
+    tm = tune_time_multiplexed(qr.mlp, xval_int, yval, scope="neuron",
+                               max_sweeps=2)
+    print(f"   smac_neuron: bha={tm.bha:.2f}% repl={tm.replacements}")
+
+    print("== 4. design-architecture costs (paper III + V) ==")
+    for arch, mlp, styles in [("parallel", tp.mlp,
+                               ("behavioral", "cavm", "cmvm")),
+                              ("smac_neuron", tm.mlp,
+                               ("behavioral", "mcm")),
+                              ("smac_ann", tm.mlp, ("behavioral",))]:
+        for style in styles:
+            print("   " + design_cost(mlp, arch, style).row())
+
+    print("== 5. SIMURG: emit hardware (paper VI) ==")
+    out = simurg.generate(tp.mlp, arch="parallel", style="cmvm",
+                          top="pendigits_ann")
+    out.write("examples/out/simurg_pendigits")
+    print("   wrote examples/out/simurg_pendigits/"
+          "{pendigits_ann.v, tb_*.v, vectors.txt, synth.tcl, report.json}")
+
+
+if __name__ == "__main__":
+    main()

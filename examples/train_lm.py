@@ -1,0 +1,65 @@
+"""End-to-end LM training driver: ~100M-param qwen2-0.5b-family model for a
+few hundred steps on the synthetic token pipeline, with checkpoint/restart,
+straggler tracking, and loss logging.
+
+The model is the real qwen2-0.5b architecture at reduced width (d=512,
+12 layers, 8k vocab ~= 100M params incl. embeddings) so it trains on CPU in
+minutes; every code path (scan-over-layers, GQA+bias attention, chunked xent,
+AdamW, fault-tolerant loop) is the production one.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.tokens import TokenPipeline
+from repro.nn import Model, get_config
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.runtime.step import make_train_step
+from repro.runtime.train import TrainConfig, TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("qwen2-0.5b"),
+        n_layers=12, d_model=512, n_heads=8, n_kv_heads=2, d_ff=2048,
+        vocab=8192, remat=False, dtype="float32")
+    m = Model(cfg)
+    n_params = sum(l.size for l in jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda: m.init(jax.random.PRNGKey(0)))))
+    print(f"model: {cfg.name}-derived, {n_params/1e6:.1f}M params")
+
+    params = m.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=3e-4, schedule=cosine_schedule(3e-4, 20, args.steps))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(m, opt), donate_argnums=(0, 1))
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch)
+
+    loop = TrainLoop(
+        TrainConfig(total_steps=args.steps, ckpt_every=100,
+                    ckpt_dir=args.ckpt_dir, log_every=20),
+        step, pipe)
+    params, opt_state = loop.run(params, opt_state)
+    for rec in loop.metrics_log:
+        if "loss" in rec:
+            print(f"  step {rec['step']:4d}  loss={rec['loss']:.4f}  "
+                  f"dt={rec['dt']*1e3:.0f}ms")
+    first = next(r["loss"] for r in loop.metrics_log if "loss" in r)
+    last = [r["loss"] for r in loop.metrics_log if "loss" in r][-1]
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'OK: learning' if last < first else 'NOT LEARNING'})")
+
+
+if __name__ == "__main__":
+    main()

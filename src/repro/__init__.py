@@ -1,0 +1,3 @@
+"""repro: the paper's hardware-aware ANN pipeline (repro.core) + the
+production multi-pod JAX framework it is embedded in (nn/quant/kernels/
+optim/ckpt/runtime/launch)."""

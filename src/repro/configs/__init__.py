@@ -1,0 +1,5 @@
+"""One config module per assigned architecture (+ the paper's own MLPs).
+
+Each module defines CONFIG (an ArchConfig) registered under its arch id;
+select with --arch <id> in the launchers.
+"""

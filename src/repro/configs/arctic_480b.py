@@ -1,0 +1,18 @@
+"""arctic-480b [moe]: 128 experts top-2 + dense residual, GQA (kv=8).
+[hf:Snowflake/snowflake-arctic-base; hf]
+
+The dense-residual FFN runs in parallel with the routed MoE every layer
+(Arctic's "dense-MoE hybrid"). Optimizer state is kept in bf16 — at 480B
+params the fp32 Adam moments alone (3.8 TB) would exceed the single-pod HBM
+(256 x 16 GB = 4 TB); DESIGN.md 4 records this choice.
+"""
+from repro.nn.types import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=4864, vocab=32000,
+    n_experts=128, top_k=2,
+    moe_dense_residual=True, dense_ff=4864,
+    param_dtype="bfloat16", opt_state_dtype="bfloat16",
+))

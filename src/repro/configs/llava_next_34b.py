@@ -1,0 +1,16 @@
+"""llava-next-34b [vlm]: 60L decoder backbone + anyres patch-embed stub.
+[hf:llava-hf/llava-v1.6-*; unverified]
+
+The vision tower is a STUB per the assignment: input_specs() supplies
+precomputed patch embeddings (B, n_patches, 1024) that the model projects
+into d_model and prepends to the token stream (anyres tiling: 5 tiles x 576
+patches = 2880).
+"""
+from repro.nn.types import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llava-next-34b", family="vlm",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=20480, vocab=64000,
+    n_patches=2880,
+))

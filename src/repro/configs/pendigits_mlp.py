@@ -1,0 +1,14 @@
+"""The paper's own five ANN structures (Section VII), as configs for the
+repro.core pipeline: 16-10, 16-10-10, 16-16-10, 16-10-10-10, 16-16-10-10."""
+
+STRUCTURES = [
+    (16, 10),
+    (16, 10, 10),
+    (16, 16, 10),
+    (16, 10, 10, 10),
+    (16, 16, 10, 10),
+]
+
+def hw_activations(structure):
+    """htanh hidden + hsig output (paper Section VII, ZAAL/PyTorch row)."""
+    return tuple(["htanh"] * (len(structure) - 2) + ["hsig"])

@@ -1,0 +1,13 @@
+"""rwkv6-3b [ssm] "Finch": attention-free, data-dependent decay.
+[arXiv:2404.05892; hf]
+
+Sub-quadratic: runs long_500k (recurrent state is O(1) in context).
+"""
+from repro.nn.types import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="rwkv6-3b", family="ssm",
+    n_layers=32, d_model=2560, n_heads=0, n_kv_heads=0,
+    d_ff=8960, vocab=65536,
+    rwkv_head_dim=64, subquadratic=True,
+))

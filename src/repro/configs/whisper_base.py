@@ -1,0 +1,14 @@
+"""whisper-base [audio]: enc-dec, conv frontend STUB. [arXiv:2212.04356; unverified]
+
+input_specs() supplies precomputed frame embeddings (B, 1500, 512) — the conv
+frontend is stubbed per the assignment. Decode shapes exercise the decoder
+with self-attention KV cache of seq_len plus the fixed cross-attention cache.
+"""
+from repro.nn.types import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+    d_ff=2048, vocab=51865,
+    is_encdec=True, n_enc_layers=6, n_frames=1500,
+))

@@ -1,0 +1,8 @@
+"""The paper's primary contribution: hardware-aware post-training quantization
+and multiplierless shift-add realization of feedforward ANNs, plus the SIMURG
+CAD tool and the gate-level cost model used for all paper-analogue benchmarks.
+"""
+from . import archs, csd, hwmodel, intmlp, mcm, quantize, simurg, tuning  # noqa: F401
+from .intmlp import IntMLP, forward_int, hardware_accuracy, quantize_inputs  # noqa: F401
+from .quantize import find_min_q, quantize_mlp, quantize_value  # noqa: F401
+from .tuning import tune_parallel, tune_time_multiplexed  # noqa: F401

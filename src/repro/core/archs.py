@@ -1,0 +1,280 @@
+"""Design architectures (paper Section III) and their cost reports.
+
+Three realizations of a quantized :class:`~repro.core.intmlp.IntMLP`:
+
+* ``parallel``     — all neuron computations concurrent (Fig. 4);
+* ``smac_neuron``  — one MAC block per neuron, layer-synchronized (Fig. 6),
+  cycles = sum_i (iota_i + 1);
+* ``smac_ann``     — a single MAC for the whole network (Fig. 7),
+  cycles = sum_i (iota_i + 2) * eta_i.
+
+Each supports ``style='behavioral'`` (real multipliers) or a multiplierless
+style (Section V): parallel takes ``'cavm'`` (per-neuron shift-add, alg. of
+[19]) or ``'cmvm'`` (per-layer shared shift-add, alg. of [18]); SMAC_NEURON
+takes ``'mcm'`` (per-layer MCM block feeding the accumulators, Fig. 9).
+SMAC_ANN multiplierless is intentionally priced too — the paper notes it
+*increases* complexity, and the model reproduces that.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import hwmodel, mcm
+from .hwmodel import TECH40, Primitive, acc_bits, adder, mux, register
+from .intmlp import FRAC, IntMLP
+from .tuning import sls_of
+
+__all__ = ["DesignReport", "design_cost", "cycle_count"]
+
+BITS_X = 8  # layer IO bitwidth (paper Section VII)
+
+
+@dataclass
+class DesignReport:
+    arch: str
+    style: str
+    area_um2: float
+    latency_ns: float
+    energy_pj: float
+    cycles: int
+    clock_ns: float
+    n_adders: int = 0
+    n_mults: int = 0
+    detail: dict = field(default_factory=dict)
+
+    def row(self) -> str:
+        return (f"{self.arch:12s} {self.style:10s} area={self.area_um2:10.0f}um2 "
+                f"lat={self.latency_ns:9.2f}ns energy={self.energy_pj:9.1f}pJ "
+                f"cyc={self.cycles:5d} clk={self.clock_ns:5.2f}ns")
+
+
+def _wbits(values) -> int:
+    vals = [abs(int(v)) for v in np.asarray(values).ravel() if int(v) != 0]
+    return max((v.bit_length() for v in vals), default=1) + 1  # +1 sign
+
+
+def cycle_count(mlp: IntMLP, arch: str) -> int:
+    iotas = [w.shape[0] for w in mlp.weights]       # inputs per layer
+    etas = [w.shape[1] for w in mlp.weights]        # neurons per layer
+    if arch == "parallel":
+        return 1
+    if arch == "smac_neuron":
+        return sum(i + 1 for i in iotas)
+    if arch == "smac_ann":
+        return sum((i + 2) * e for i, e in zip(iotas, etas))
+    raise ValueError(arch)
+
+
+# ---------------------------------------------------------------------------
+# Parallel architecture
+# ---------------------------------------------------------------------------
+
+def _parallel(mlp: IntMLP, style: str, tech) -> DesignReport:
+    area = 0.0
+    energy = 0.0
+    path = 0.0
+    n_adders = n_mults = 0
+    for w, b, act in zip(mlp.weights, mlp.biases, mlp.activations):
+        n_in, n_out = w.shape
+        abits = acc_bits(n_in + 1, BITS_X, _wbits(w))
+        layer_delay = 0.0
+        if style == "behavioral":
+            mult_delay = 0.0
+            tree_delay = 0.0
+            for m in range(n_out):
+                col = w[:, m]
+                nz = int(np.count_nonzero(col))
+                for v in col:
+                    if int(v) != 0:
+                        p = hwmodel.multiplier(BITS_X, _wbits([v]), tech)
+                        area += p.area
+                        energy += p.energy
+                        mult_delay = max(mult_delay, p.delay)
+                        n_mults += 1
+                tree = adder(abits, tech)
+                n_tree = max(0, nz - 1) + 1          # + bias adder
+                area += tree.area * n_tree
+                energy += tree.energy * n_tree
+                depth = int(np.ceil(np.log2(max(2, nz)))) + 1
+                tree_delay = max(tree_delay, depth * tree.delay)
+                n_adders += n_tree
+            # layer critical path = slowest multiplier + slowest adder tree
+            # (neurons are parallel, not chained)
+            layer_delay = mult_delay + tree_delay
+        elif style in ("cavm", "cmvm"):
+            if style == "cavm":
+                graphs = [mcm.synthesize(w[:, m][None, :], "cse")
+                          for m in range(n_out)]
+            else:
+                graphs = [mcm.synthesize(w.T, "cse")]   # (n_out, n_in) matrix
+            gdelay = 0.0
+            for g in graphs:
+                bounds = g.value_bounds(input_max=(1 << (BITS_X - 1)))
+                for bnd in bounds[: len(g.nodes)] + bounds[len(g.nodes):]:
+                    p = adder(max(1, int(bnd).bit_length() + 1), tech)
+                    area += p.area
+                    energy += p.energy
+                n_adders += g.n_adders
+                gdelay = max(gdelay, g.depth * adder(abits, tech).delay)
+            bias_add = adder(abits, tech)
+            area += bias_add.area * n_out
+            energy += bias_add.energy * n_out
+            layer_delay = gdelay + bias_add.delay
+            n_adders += n_out
+        else:
+            raise ValueError(style)
+        au = hwmodel.activation_unit(abits, tech)
+        area += au.area * n_out
+        energy += au.energy * n_out
+        layer_delay += au.delay
+        path += layer_delay
+    # output flip-flops (paper: added for fair comparison with time-mux)
+    n_final = mlp.weights[-1].shape[1]
+    reg = register(BITS_X, tech)
+    area += reg.area * n_final
+    energy += reg.energy * n_final
+    clock = path + reg.delay
+    leak = area * tech.leak_uw_per_um2 * clock * 1e-3  # fJ
+    return DesignReport("parallel", style, area, clock, energy + leak, 1,
+                        clock, n_adders, n_mults)
+
+
+# ---------------------------------------------------------------------------
+# SMAC architectures
+# ---------------------------------------------------------------------------
+
+def _smac_neuron(mlp: IntMLP, style: str, tech) -> DesignReport:
+    area = 0.0
+    e_cycle_layers = []
+    clock = 0.0
+    n_adders = n_mults = 0
+    for w, b, act in zip(mlp.weights, mlp.biases, mlp.activations):
+        n_in, n_out = w.shape
+        layer_area = 0.0
+        layer_ecycle = 0.0
+        if style == "behavioral":
+            for m in range(n_out):
+                col = w[:, m]
+                sls = sls_of(col)
+                wb = max(1, _wbits(col) - sls)       # IV-C: datapath narrowed
+                abits = acc_bits(n_in + 1, BITS_X, wb)
+                mult = hwmodel.multiplier(BITS_X, wb, tech)
+                acc = adder(abits, tech)
+                reg = register(abits, tech)
+                wmux = mux(n_in, wb, tech)
+                layer_area += mult.area + acc.area + reg.area + wmux.area
+                layer_ecycle += mult.energy + acc.energy + reg.energy + wmux.energy
+                clock = max(clock, mult.delay + acc.delay + reg.delay
+                            + wmux.delay)
+                n_mults += 1
+                n_adders += 1
+        elif style == "mcm":
+            # Fig. 9: one MCM block for all layer weights x the muxed input
+            consts = np.asarray(sorted({abs(int(v)) for v in w.ravel()
+                                        if int(v) != 0}), dtype=np.int64)
+            if consts.size == 0:
+                consts = np.asarray([1], dtype=np.int64)
+            g = mcm.synthesize(consts[:, None], "cse")  # MCM: (m,1) matrix
+            bounds = g.value_bounds(input_max=(1 << (BITS_X - 1)))
+            for bnd in bounds:
+                p = adder(max(1, int(bnd).bit_length() + 1), tech)
+                layer_area += p.area
+                layer_ecycle += p.energy
+            n_adders += g.n_adders
+            mcm_delay = g.depth * adder(BITS_X + _wbits(w), tech).delay
+            for m in range(n_out):
+                abits = acc_bits(n_in + 1, BITS_X, _wbits(w[:, m]))
+                acc = adder(abits, tech)
+                reg = register(abits, tech)
+                pmux = mux(len(consts), abits, tech)  # product select (Fig. 9)
+                layer_area += acc.area + reg.area + pmux.area
+                layer_ecycle += acc.energy + reg.energy + pmux.energy
+                clock = max(clock, mcm_delay + pmux.delay + acc.delay
+                            + reg.delay)
+                n_adders += 1
+        else:
+            raise ValueError(style)
+        # shared per-layer input mux + control counter
+        imux = mux(n_in, BITS_X, tech)
+        ctrl = hwmodel.counter(max(1, int(np.ceil(np.log2(n_in + 1)))), tech)
+        au = hwmodel.activation_unit(BITS_X + _wbits(w), tech)
+        layer_area += imux.area + ctrl.area + au.area * n_out
+        layer_ecycle += imux.energy + ctrl.energy
+        area += layer_area
+        e_cycle_layers.append((layer_ecycle, w.shape[0] + 1))
+    cycles = cycle_count(mlp, "smac_neuron")
+    # layer k is active only during its own iota_k+1 cycles (paper: disabled
+    # layers save power)
+    energy = sum(e * c for e, c in e_cycle_layers)
+    latency = cycles * clock
+    leak = area * TECH40.leak_uw_per_um2 * latency * 1e-3
+    return DesignReport("smac_neuron", style, area, latency, energy + leak,
+                        cycles, clock, n_adders, n_mults)
+
+
+def _smac_ann(mlp: IntMLP, style: str, tech) -> DesignReport:
+    all_w = np.concatenate([w.ravel() for w in mlp.weights])
+    sls = sls_of(all_w) if style == "behavioral" else 0
+    wb = max(1, _wbits(all_w) - sls)
+    max_in = max(w.shape[0] for w in mlp.weights)
+    max_out = max(w.shape[1] for w in mlp.weights)
+    n_weights = int(sum(w.size for w in mlp.weights))
+    n_biases = int(sum(b.size for b in mlp.biases))
+    abits = acc_bits(max_in + 1, BITS_X, wb)
+
+    n_adders = n_mults = 0
+    if style == "behavioral":
+        core = hwmodel.multiplier(BITS_X, wb, tech)
+        n_mults = 1
+    elif style == "mcm":
+        consts = np.asarray(sorted({abs(int(v)) for v in all_w if int(v) != 0}),
+                            dtype=np.int64)[:, None]
+        g = mcm.synthesize(consts, "cse")
+        a = sum(adder(max(1, int(b).bit_length() + 1), tech).area
+                for b in g.value_bounds(1 << (BITS_X - 1)))
+        e = sum(adder(max(1, int(b).bit_length() + 1), tech).energy
+                for b in g.value_bounds(1 << (BITS_X - 1)))
+        core = Primitive(a, g.depth * adder(abits, tech).delay
+                         + mux(len(consts), abits, tech).delay, e)
+        core = core + mux(len(consts), abits, tech)
+        n_adders += g.n_adders
+    else:
+        raise ValueError(style)
+
+    acc = adder(abits, tech)
+    n_adders += 1
+    reg = register(abits, tech)
+    imux = mux(max_in + max_out, BITS_X, tech)   # primary inputs + layer regs
+    wmux = mux(n_weights, wb, tech)
+    bmux = mux(n_biases, wb, tech)
+    lregs = register(BITS_X, tech)
+    ctrl = (hwmodel.counter(max(1, int(np.ceil(np.log2(len(mlp.weights) + 1)))), tech)
+            + hwmodel.counter(max(1, int(np.ceil(np.log2(max_in + 2)))), tech)
+            + hwmodel.counter(max(1, int(np.ceil(np.log2(max_out + 1)))), tech))
+    au = hwmodel.activation_unit(abits, tech)
+
+    area = (core.area + acc.area + reg.area + imux.area + wmux.area
+            + bmux.area + lregs.area * max_out + ctrl.area + au.area)
+    e_cycle = (core.energy + acc.energy + reg.energy + imux.energy
+               + wmux.energy + bmux.energy + ctrl.energy)
+    clock = core.delay + acc.delay + reg.delay + max(imux.delay, wmux.delay)
+    cycles = cycle_count(mlp, "smac_ann")
+    latency = cycles * clock
+    energy = e_cycle * cycles
+    leak = area * tech.leak_uw_per_um2 * latency * 1e-3
+    return DesignReport("smac_ann", style, area, latency, energy + leak,
+                        cycles, clock, n_adders, n_mults)
+
+
+def design_cost(mlp: IntMLP, arch: str, style: str = "behavioral",
+                tech=TECH40) -> DesignReport:
+    """Price an IntMLP under a Section III architecture + Section V style."""
+    if arch == "parallel":
+        return _parallel(mlp, style, tech)
+    if arch == "smac_neuron":
+        return _smac_neuron(mlp, style, tech)
+    if arch == "smac_ann":
+        return _smac_ann(mlp, style, tech)
+    raise ValueError(arch)

@@ -1,0 +1,92 @@
+"""Canonical signed digit (CSD) arithmetic.
+
+CSD writes an integer as sum_i d_i 2^i with d_i in {-1, 0, +1}, no two
+adjacent nonzero digits, and the minimum possible number of nonzero digits.
+The paper's hardware-cost proxy ``tnzd`` is the total nonzero-digit count of
+all weights/biases under CSD (Section II-B, footnote 1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "to_csd",
+    "from_csd",
+    "nnz",
+    "tnzd",
+    "drop_least_significant_digit",
+    "largest_left_shift",
+]
+
+
+def to_csd(value: int) -> list[int]:
+    """CSD digits of ``value``, least-significant first.
+
+    Standard recoding: scan LSB->MSB; a run of ones ``0111..1`` becomes
+    ``100..0(-1)``. Returns ``[]`` for 0.
+    """
+    value = int(value)
+    digits: list[int] = []
+    while value != 0:
+        if value & 1:
+            # remainder in {-1, +1} chosen so (value - d) is divisible by 4's
+            # "no adjacent nonzero" rule: d = 2 - (value mod 4)
+            d = 2 - (value & 3)
+            digits.append(d)
+            value -= d
+        else:
+            digits.append(0)
+        value >>= 1
+    return digits
+
+
+def from_csd(digits: list[int]) -> int:
+    return sum(d << i for i, d in enumerate(digits))
+
+
+def nnz(value: int) -> int:
+    """Number of nonzero CSD digits of ``value``."""
+    return sum(1 for d in to_csd(value) if d != 0)
+
+
+def tnzd(int_arrays) -> int:
+    """Total nonzero CSD digits over a collection of integer arrays.
+
+    This is the paper's high-level hardware cost (Tables I-IV column tnzd).
+    """
+    total = 0
+    for arr in int_arrays:
+        flat = np.asarray(arr).ravel()
+        total += int(sum(nnz(int(v)) for v in flat))
+    return total
+
+
+def drop_least_significant_digit(value: int) -> int:
+    """Remove the least-significant nonzero CSD digit (paper Section IV-B 2a).
+
+    The returned alternative weight always has strictly fewer nonzero digits.
+    Returns 0 when ``value`` has a single nonzero digit.
+    """
+    digits = to_csd(value)
+    for i, d in enumerate(digits):
+        if d != 0:
+            digits[i] = 0
+            return from_csd(digits)
+    return 0
+
+
+def largest_left_shift(value: int) -> int:
+    """lls: number of trailing zero bits (value = odd << lls). 0 for value 0.
+
+    Paper Section IV-C step 2a. For 0 we return a large sentinel so that 0
+    weights never constrain a neuron's smallest-left-shift value.
+    """
+    value = int(value)
+    if value == 0:
+        return 63  # sentinel: zero weights impose no shift constraint
+    value = abs(value)
+    lls = 0
+    while value & 1 == 0:
+        value >>= 1
+        lls += 1
+    return lls

@@ -1,0 +1,103 @@
+"""Gate-level hardware cost model (area / delay / energy primitives).
+
+Prices the design architectures of Section III the way the paper's synthesis
+flow (Cadence RTL Compiler + TSMC 40nm) does, but analytically: consistent
+per-bit constants for adders, array multipliers, muxes and registers.  The
+absolute numbers are model constants (see DESIGN.md 2 "what does NOT
+transfer"); all paper claims we validate are *relative* (before/after tuning,
+behavioral vs multiplierless, parallel vs SMAC orderings), for which a
+consistent linear model is sufficient.
+
+Constants are in um^2 (area), ns (delay) and fJ (energy per operation),
+loosely calibrated to 40nm standard-cell data (Horowitz ISSCC'14 scaling).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["Tech", "TECH40", "adder", "multiplier", "mux", "register",
+           "counter", "activation_unit", "Primitive"]
+
+
+@dataclass(frozen=True)
+class Tech:
+    a_fa: float = 4.3        # um^2 per full-adder bit
+    a_reg: float = 5.1       # um^2 per register bit
+    a_mux2: float = 1.6      # um^2 per 2:1 mux bit
+    a_act: float = 2.0       # um^2 per bit of clamp/shift activation logic
+    d_fa: float = 0.045      # ns per ripple-carry bit
+    d_mux: float = 0.03      # ns per mux stage
+    d_reg: float = 0.08      # ns clk->q + setup
+    e_fa: float = 1.9        # fJ per full-adder bit toggle
+    e_reg: float = 2.4       # fJ per register bit toggle
+    e_mux2: float = 0.5      # fJ per mux bit
+    activity: float = 0.5    # average switching activity factor
+    leak_uw_per_um2: float = 0.004  # static power density (uW / um^2)
+
+
+TECH40 = Tech()
+
+
+@dataclass
+class Primitive:
+    """Area/delay/energy of one hardware block instance."""
+    area: float
+    delay: float
+    energy: float  # dynamic energy per use (fJ), already activity-scaled
+
+    def __add__(self, other: "Primitive") -> "Primitive":
+        return Primitive(self.area + other.area,
+                         max(self.delay, other.delay),
+                         self.energy + other.energy)
+
+
+def adder(bits: int, tech: Tech = TECH40) -> Primitive:
+    """Two-operand ripple adder/subtractor of ``bits`` result bits."""
+    bits = max(1, int(bits))
+    return Primitive(area=bits * tech.a_fa,
+                     delay=bits * tech.d_fa,
+                     energy=bits * tech.e_fa * tech.activity)
+
+
+def multiplier(bits_a: int, bits_b: int, tech: Tech = TECH40) -> Primitive:
+    """Array multiplier: bits_a x bits_b partial-product grid."""
+    ba, bb = max(1, int(bits_a)), max(1, int(bits_b))
+    return Primitive(area=ba * bb * tech.a_fa * 0.95,
+                     delay=(ba + bb) * tech.d_fa,
+                     energy=ba * bb * tech.e_fa * tech.activity)
+
+
+def mux(n_inputs: int, bits: int, tech: Tech = TECH40) -> Primitive:
+    """n:1 mux as a tree of 2:1 muxes."""
+    n = max(1, int(n_inputs))
+    stages = int(np.ceil(np.log2(n))) if n > 1 else 0
+    return Primitive(area=(n - 1) * bits * tech.a_mux2,
+                     delay=stages * tech.d_mux,
+                     energy=(n - 1) * bits * tech.e_mux2 * tech.activity)
+
+
+def register(bits: int, tech: Tech = TECH40) -> Primitive:
+    return Primitive(area=bits * tech.a_reg,
+                     delay=tech.d_reg,
+                     energy=bits * tech.e_reg * tech.activity)
+
+
+def counter(bits: int, tech: Tech = TECH40) -> Primitive:
+    """Counter = register + incrementer."""
+    r, a = register(bits, tech), adder(bits, tech)
+    return Primitive(r.area + a.area, a.delay + r.delay, r.energy + a.energy)
+
+
+def activation_unit(bits: int, tech: Tech = TECH40) -> Primitive:
+    """hsig/htanh/satlin clamp+shift datapath."""
+    bits = max(1, int(bits))
+    return Primitive(area=bits * tech.a_act,
+                     delay=2 * tech.d_mux,
+                     energy=bits * tech.e_mux2 * tech.activity)
+
+
+def acc_bits(n_terms: int, bits_x: int, bits_w: int) -> int:
+    """Accumulator bitwidth for sum of n products of (bits_x x bits_w) ints."""
+    return bits_x + bits_w + int(np.ceil(np.log2(max(2, n_terms))))

@@ -1,0 +1,124 @@
+"""Bit-exact integer MLP semantics ("hardware accuracy" oracle).
+
+The paper evaluates every tuning candidate by the ANN's *hardware* accuracy:
+the network computed with integer weights/biases, 8-bit activations, and the
+hardware activation functions (hsig / htanh / satlin / relu / lin).  This
+module defines that fixed-point semantics once; the quantizer, both tuning
+algorithms, SIMURG's testbench and the Pallas csd_matvec oracle all use it.
+
+Fixed-point scheme
+------------------
+* Activations: signed 8-bit, FRAC = 7 fractional bits, value a = a_int / 2^7,
+  representable range [-1, 1).  Paper Section VII fixes layer IO bitwidth at 8.
+* Weights/biases: integers at scale 2^q (paper Section IV-A: ceil(w * 2^q)).
+* Accumulator: y_int = sum_i w_int a_int + (b_int << FRAC), at scale 2^(q+7).
+* Activation applied on the accumulator (exact shift/clamp arithmetic), then
+  re-quantized to 8 bits by an arithmetic right shift of q.
+
+All arithmetic is int64 (numpy) / int32 (jax) — exact, no rounding besides
+the specified shifts, so numpy and jax paths agree bit-for-bit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+FRAC = 7  # fractional bits of the 8-bit activation representation
+ACT_MIN, ACT_MAX = -(1 << FRAC), (1 << FRAC) - 1
+
+HW_ACTIVATIONS = ("htanh", "hsig", "satlin", "relu", "lin")
+
+
+@dataclass
+class IntMLP:
+    """Integer-weight MLP: weights[k] has shape (n_in_k, n_out_k)."""
+
+    weights: list  # list[np.ndarray int64 (n_in, n_out)]
+    biases: list   # list[np.ndarray int64 (n_out,)]
+    activations: list  # list[str], one per layer
+    q: int         # weight scale exponent
+
+    def copy(self) -> "IntMLP":
+        return IntMLP([w.copy() for w in self.weights],
+                      [b.copy() for b in self.biases],
+                      list(self.activations), self.q)
+
+    @property
+    def structure(self) -> list:
+        return [self.weights[0].shape[0]] + [w.shape[1] for w in self.weights]
+
+
+def _apply_act(acc: np.ndarray, act: str, scale_pow: int) -> np.ndarray:
+    """Apply a hardware activation on an accumulator at scale 2^scale_pow."""
+    one = np.int64(1) << scale_pow
+    if act == "lin":
+        return acc
+    if act == "htanh":
+        return np.clip(acc, -one, one)
+    if act == "satlin":
+        return np.clip(acc, 0, one)
+    if act == "relu":
+        # saturating relu: clamp to the representable [0, 1) band so the 8-bit
+        # requantization below cannot wrap (documented deviation, DESIGN 8).
+        return np.clip(acc, 0, one)
+    if act == "hsig":
+        # hsig(y) = clamp(y/2 + 1/2, 0, 1) -- exact: shift then offset
+        return np.clip((acc >> 1) + (one >> 1), 0, one)
+    raise ValueError(f"unknown hardware activation {act!r}")
+
+
+def forward_int(mlp: IntMLP, x_int: np.ndarray, return_acc: bool = False) -> np.ndarray:
+    """Bit-exact integer forward pass.
+
+    x_int: (batch, n_in) int64 activations at scale 2^FRAC.
+    Returns 8-bit output activations (batch, n_out); if return_acc, returns the
+    final-layer pre-activation accumulators instead (useful for argmax ties).
+    """
+    a = x_int.astype(np.int64)
+    last_acc = None
+    for w, b, act in zip(mlp.weights, mlp.biases, mlp.activations):
+        acc = a @ w.astype(np.int64) + (b.astype(np.int64) << FRAC)
+        last_acc = acc
+        scale_pow = mlp.q + FRAC
+        acc = _apply_act(acc, act, scale_pow)
+        # requantize back to 8-bit activations (arithmetic shift by q)
+        a = np.clip(acc >> mlp.q, ACT_MIN, ACT_MAX)
+    return last_acc if return_acc else a
+
+
+def hardware_accuracy(mlp: IntMLP, x_int: np.ndarray, labels: np.ndarray) -> float:
+    """Classification accuracy (%) of the integer network — the paper's ha."""
+    out = forward_int(mlp, x_int)
+    pred = np.argmax(out, axis=1)
+    return 100.0 * float(np.mean(pred == labels))
+
+
+def quantize_inputs(x_float: np.ndarray) -> np.ndarray:
+    """Quantize float inputs in [-1, 1) to the 8-bit activation grid."""
+    return np.clip(np.round(x_float * (1 << FRAC)), ACT_MIN, ACT_MAX).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# JAX twin (used by tests to show numpy/jax bit-exact agreement and by the
+# batched tuning evaluator when jitted evaluation is preferred).
+# ---------------------------------------------------------------------------
+
+def forward_int_jax(mlp: IntMLP, x_int):
+    import jax.numpy as jnp
+
+    a = jnp.asarray(x_int, dtype=jnp.int32)
+    for w, b, act in zip(mlp.weights, mlp.biases, mlp.activations):
+        acc = a @ jnp.asarray(w, dtype=jnp.int32) + (
+            jnp.asarray(b, dtype=jnp.int32) << FRAC)
+        one = jnp.int32(1 << (mlp.q + FRAC))
+        if act == "htanh":
+            acc = jnp.clip(acc, -one, one)
+        elif act in ("satlin", "relu"):
+            acc = jnp.clip(acc, 0, one)
+        elif act == "hsig":
+            acc = jnp.clip((acc >> 1) + (one >> 1), 0, one)
+        elif act != "lin":
+            raise ValueError(act)
+        a = jnp.clip(acc >> mlp.q, ACT_MIN, ACT_MAX)
+    return a

@@ -1,0 +1,202 @@
+"""Multiplierless constant multiplication synthesis (paper Section V).
+
+Realizes SCM / MCM / CAVM / CMVM operations as shift-add networks:
+
+* ``dbr``  — digit-based recoding baseline [23]: each constant expanded into
+  its CSD digits, summed directly (Fig. 3b).
+* ``cse``  — greedy common-subexpression elimination in the spirit of
+  [17]-[19]: repeatedly extract the most frequent two-term pattern across all
+  outputs (Fig. 3c regime).  DESIGN.md 8 notes this is a faithful heuristic,
+  not the exact CP formulation of [17].
+
+The result is an :class:`AdderGraph` — a list of two-operand add/sub ops over
+shifted terms — which SIMURG lowers to Verilog, the cost model prices, and
+``evaluate`` executes exactly for the correctness tests.
+
+An MCM operation (m constants, one variable) is a CMVM with an (m x 1) matrix;
+a CAVM (one output row) is a (1 x n) matrix; SCM is (1 x 1).
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["AdderGraph", "synthesize", "dbr_adder_count", "evaluate"]
+
+# A term is (var, shift, sign): var < n_inputs refers to input x_var, otherwise
+# to intermediate node var - n_inputs.  sign in {+1, -1}.
+
+
+@dataclass
+class AdderGraph:
+    n_inputs: int
+    matrix: np.ndarray                    # the (m, n) constant matrix realized
+    nodes: list = field(default_factory=list)    # node i: (termA, termB)
+    outputs: list = field(default_factory=list)  # output j: list of terms (sum)
+
+    @property
+    def n_adders(self) -> int:
+        """Two-operand adder/subtractor count (shifts are wires)."""
+        total = len(self.nodes)
+        for terms in self.outputs:
+            total += max(0, len(terms) - 1)
+        return total
+
+    @property
+    def depth(self) -> int:
+        """Adder-stage depth of the critical path (for the latency model)."""
+        memo = {}
+
+        def node_depth(v):
+            if v < self.n_inputs:
+                return 0
+            if v not in memo:
+                (a, b) = self.nodes[v - self.n_inputs]
+                memo[v] = 1 + max(node_depth(a[0]), node_depth(b[0]))
+            return memo[v]
+
+        d = 0
+        for terms in self.outputs:
+            if not terms:
+                continue
+            base = max(node_depth(t[0]) for t in terms)
+            # remaining terms summed as a balanced tree
+            tree = int(np.ceil(np.log2(max(1, len(terms)))))
+            d = max(d, base + tree)
+        return d
+
+    def value_bounds(self, input_max: int = 255) -> list:
+        """Max |value| each node/output can take — sizes adder bitwidths."""
+        coeffs = {}  # var -> np.ndarray coefficient over inputs
+
+        def coeff(v):
+            if v < self.n_inputs:
+                c = np.zeros(self.n_inputs, dtype=np.int64)
+                c[v] = 1
+                return c
+            if v not in coeffs:
+                (a, b) = self.nodes[v - self.n_inputs]
+                coeffs[v] = (coeff(a[0]) * (a[2] << a[1])
+                             + coeff(b[0]) * (b[2] << b[1]))
+            return coeffs[v]
+
+        bounds = []
+        for i in range(len(self.nodes)):
+            bounds.append(int(np.abs(coeff(self.n_inputs + i)).sum()) * input_max)
+        for terms in self.outputs:
+            c = np.zeros(self.n_inputs, dtype=np.int64)
+            for t in terms:
+                c = c + coeff(t[0]) * (t[2] << t[1])
+            bounds.append(int(np.abs(c).sum()) * input_max)
+        return bounds
+
+
+def _csd_terms(matrix: np.ndarray) -> list:
+    """Expand each row of the constant matrix into signed shifted input terms."""
+    from . import csd
+
+    m, n = matrix.shape
+    outputs = []
+    for j in range(m):
+        terms = []
+        for k in range(n):
+            for pos, d in enumerate(csd.to_csd(int(matrix[j, k]))):
+                if d != 0:
+                    terms.append((k, pos, d))
+        outputs.append(terms)
+    return outputs
+
+
+def dbr_adder_count(matrix: np.ndarray) -> int:
+    """Adder count of the digit-based recoding baseline (no sharing)."""
+    outputs = _csd_terms(np.atleast_2d(np.asarray(matrix, dtype=np.int64)))
+    return sum(max(0, len(t) - 1) for t in outputs)
+
+
+def _canonical_pair(t1, t2):
+    """Canonical form of a two-term pattern: shift-normalized, sign-normalized.
+
+    Returns (key, base_shift, sigma): the pattern occurs at left-shift
+    ``base_shift`` with overall sign ``sigma``.
+    """
+    (a, b) = sorted((t1, t2), key=lambda t: (t[0], t[1], t[2]))
+    base = min(a[1], b[1])
+    a = (a[0], a[1] - base, a[2])
+    b = (b[0], b[1] - base, b[2])
+    sigma = 1
+    if a[2] < 0 or (a[2] == 0 and b[2] < 0):
+        sigma = -1
+        a = (a[0], a[1], -a[2])
+        b = (b[0], b[1], -b[2])
+    return (a, b), base, sigma
+
+
+def synthesize(matrix, method: str = "cse") -> AdderGraph:
+    """Build a shift-add network for the CMVM ``y = matrix @ x``."""
+    matrix = np.atleast_2d(np.asarray(matrix, dtype=np.int64))
+    m, n = matrix.shape
+    graph = AdderGraph(n_inputs=n, matrix=matrix)
+    outputs = _csd_terms(matrix)
+
+    if method == "dbr":
+        graph.outputs = outputs
+        return graph
+    if method != "cse":
+        raise ValueError(method)
+
+    next_var = n
+    while True:
+        counts = Counter()
+        for terms in outputs:
+            seen = set()
+            for i in range(len(terms)):
+                for jj in range(i + 1, len(terms)):
+                    key, _, _ = _canonical_pair(terms[i], terms[jj])
+                    if key not in seen:       # count once per output
+                        seen.add(key)
+                        counts[key] += 1
+        if not counts:
+            break
+        key, freq = counts.most_common(1)[0]
+        if freq < 2:
+            break
+        (a, b) = key
+        graph.nodes.append((a, b))
+        new_var = next_var
+        next_var += 1
+        for terms in outputs:
+            # replace the first occurrence of the pattern in each output
+            done = False
+            for i in range(len(terms)):
+                if done:
+                    break
+                for jj in range(i + 1, len(terms)):
+                    k2, base, sigma = _canonical_pair(terms[i], terms[jj])
+                    if k2 == key:
+                        t_new = (new_var, base, sigma)
+                        rest = [terms[x] for x in range(len(terms))
+                                if x not in (i, jj)]
+                        terms[:] = rest + [t_new]
+                        done = True
+                        break
+    graph.outputs = outputs
+    return graph
+
+
+def evaluate(graph: AdderGraph, x: np.ndarray) -> np.ndarray:
+    """Execute the shift-add network exactly; x is (..., n_inputs) int64."""
+    x = np.asarray(x, dtype=np.int64)
+    vals = [x[..., i] for i in range(graph.n_inputs)]
+    for (a, b) in graph.nodes:
+        va = vals[a[0]] * (a[2] << a[1])
+        vb = vals[b[0]] * (b[2] << b[1])
+        vals.append(va + vb)
+    outs = []
+    for terms in graph.outputs:
+        acc = np.zeros(x.shape[:-1], dtype=np.int64)
+        for t in terms:
+            acc = acc + vals[t[0]] * (t[2] << t[1])
+        outs.append(acc)
+    return np.stack(outs, axis=-1)

@@ -1,0 +1,64 @@
+"""Minimum-quantization-value search (paper Section IV-A).
+
+Floating-point weights/biases from training are converted to integers by
+``ceil(v * 2^q)``; the search increments q until the hardware accuracy on the
+validation split stops improving by more than 0.1 percentage points.
+
+Interpretation note (DESIGN.md 8): the paper's step 5 reads "if ha(q) > 0 and
+ha(q) - ha(q-1) > 0.1%, go to step 2".  A literal reading would stop at q=1
+whenever the 1-bit network scores 0%; the evident intent is to keep growing q
+while the network is still useless OR still improving, so we continue while
+``ha(q) <= chance`` or the improvement exceeds the 0.1% budget, capped at
+``q_max``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .intmlp import IntMLP, hardware_accuracy
+
+__all__ = ["quantize_value", "quantize_mlp", "find_min_q", "QuantResult"]
+
+
+def quantize_value(v, q: int):
+    """ceil(v * 2^q) — the paper's float->int conversion (step 3)."""
+    return np.ceil(np.asarray(v, dtype=np.float64) * (1 << q)).astype(np.int64)
+
+
+def quantize_mlp(weights, biases, activations, q: int) -> IntMLP:
+    return IntMLP(
+        weights=[quantize_value(w, q) for w in weights],
+        biases=[quantize_value(b, q) for b in biases],
+        activations=list(activations),
+        q=q,
+    )
+
+
+@dataclass
+class QuantResult:
+    q: int
+    mlp: IntMLP
+    ha: float             # hardware accuracy at q (validation, %)
+    history: list         # [(q, ha)] for every q tried
+
+
+def find_min_q(weights, biases, activations, x_val_int: np.ndarray,
+               y_val: np.ndarray, *, budget_pct: float = 0.1,
+               q_max: int = 16, chance_pct: float = 0.0) -> QuantResult:
+    """Paper Section IV-A, steps 1-6."""
+    history = []
+    prev_ha = 0.0
+    q = 0
+    best = None
+    while q < q_max:
+        q += 1                                     # step 2
+        mlp = quantize_mlp(weights, biases, activations, q)  # step 3
+        ha = hardware_accuracy(mlp, x_val_int, y_val)        # step 4
+        history.append((q, ha))
+        best = QuantResult(q=q, mlp=mlp, ha=ha, history=history)
+        if ha > chance_pct and ha - prev_ha <= budget_pct:   # steps 5-6
+            return best
+        prev_ha = ha
+    return best

@@ -1,0 +1,182 @@
+"""Hardware-aware post-training weight tuning (paper Sections IV-B and IV-C).
+
+Two tuners, both greedy hill-climbers over *hardware* (integer) accuracy on
+the validation split:
+
+* ``tune_parallel``       — parallel architecture: repeatedly remove the least
+  significant nonzero CSD digit of every weight when accuracy does not drop
+  (reduces tnzd, hence adder count of the shift-add realization).
+* ``tune_time_multiplexed`` — SMAC architectures: per neuron (scope='neuron')
+  or whole-network (scope='ann'), maximize the smallest left shift (sls) among
+  the weights so the MAC multiplier/adder/register narrow; with the paper's
+  bias-nudging fallback (+-4) when a candidate alone loses accuracy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import csd
+from .intmlp import IntMLP, hardware_accuracy
+
+__all__ = ["tune_parallel", "tune_time_multiplexed", "TuneResult", "sls_of"]
+
+
+@dataclass
+class TuneResult:
+    mlp: IntMLP
+    bha: float                 # best hardware accuracy reached (validation, %)
+    initial_ha: float
+    replacements: int          # number of committed weight replacements
+    sweeps: int                # full passes over the weights
+    log: list = field(default_factory=list)
+
+
+def _evaluator(x_val_int, y_val):
+    def ev(mlp: IntMLP) -> float:
+        return hardware_accuracy(mlp, x_val_int, y_val)
+    return ev
+
+
+# ---------------------------------------------------------------------------
+# Section IV-B: parallel architecture — CSD digit removal
+# ---------------------------------------------------------------------------
+
+def tune_parallel(mlp: IntMLP, x_val_int: np.ndarray, y_val: np.ndarray,
+                  *, max_sweeps: int = 50) -> TuneResult:
+    ev = _evaluator(x_val_int, y_val)
+    mlp = mlp.copy()
+    bha = ev(mlp)                                   # step 1
+    initial = bha
+    replaced_total = 0
+    sweeps = 0
+    log = []
+    while sweeps < max_sweeps:                      # step 3 loop
+        sweeps += 1
+        replaced_this_sweep = 0
+        for k, w in enumerate(mlp.weights):         # step 2: each weight != 0
+            flat = w.ravel()
+            for idx in range(flat.size):
+                v = int(flat[idx])
+                if v == 0:
+                    continue
+                alt = csd.drop_least_significant_digit(v)   # step 2a
+                flat[idx] = alt
+                ha = ev(mlp)
+                if ha >= bha:                        # step 2b
+                    bha = ha
+                    replaced_this_sweep += 1
+                else:
+                    flat[idx] = v                    # revert
+        replaced_total += replaced_this_sweep
+        log.append((sweeps, replaced_this_sweep, bha))
+        if replaced_this_sweep == 0:                 # step 4
+            break
+    return TuneResult(mlp=mlp, bha=bha, initial_ha=initial,
+                      replacements=replaced_total, sweeps=sweeps, log=log)
+
+
+# ---------------------------------------------------------------------------
+# Section IV-C: time-multiplexed architectures — smallest-left-shift tuning
+# ---------------------------------------------------------------------------
+
+def sls_of(values) -> int:
+    """Smallest left shift among a set of integer weights (zeros ignored)."""
+    lls = [csd.largest_left_shift(int(v)) for v in np.asarray(values).ravel()
+           if int(v) != 0]
+    return min(lls) if lls else 0
+
+
+def _bitwidth(v: int) -> int:
+    return int(abs(int(v))).bit_length()
+
+
+def _neuron_groups(mlp: IntMLP, scope: str):
+    """Yield (layer, neuron_indices) weight groups that share one MAC datapath.
+
+    scope='neuron': one group per output neuron (SMAC_NEURON, Fig. 6).
+    scope='ann'   : one group covering every weight in the net (SMAC_ANN, Fig. 7).
+    """
+    if scope == "neuron":
+        for k, w in enumerate(mlp.weights):
+            for m in range(w.shape[1]):
+                yield [(k, m)]
+    elif scope == "ann":
+        yield [(k, m) for k, w in enumerate(mlp.weights) for m in range(w.shape[1])]
+    else:
+        raise ValueError(scope)
+
+
+def _group_weights(mlp: IntMLP, group):
+    return np.concatenate([mlp.weights[k][:, m] for k, m in group])
+
+
+def tune_time_multiplexed(mlp: IntMLP, x_val_int: np.ndarray, y_val: np.ndarray,
+                          *, scope: str = "neuron", bias_range: int = 4,
+                          max_sweeps: int = 50) -> TuneResult:
+    ev = _evaluator(x_val_int, y_val)
+    mlp = mlp.copy()
+    bha = ev(mlp)                                    # step 1
+    initial = bha
+    replaced_total = 0
+    sweeps = 0
+    log = []
+    while sweeps < max_sweeps:                       # step 3 loop
+        sweeps += 1
+        improved_any = False
+        for group in _neuron_groups(mlp, scope):
+            gvals = _group_weights(mlp, group)
+            sls = sls_of(gvals)                      # step 2
+            maxbw = max((_bitwidth(v) for v in gvals if v != 0), default=0)
+            for (k, m) in group:
+                col = mlp.weights[k][:, m]
+                for n in range(col.shape[0]):
+                    w_kmn = int(col[n])
+                    if w_kmn == 0:
+                        continue
+                    lls = csd.largest_left_shift(w_kmn)     # step 2a
+                    if lls != sls:
+                        continue
+                    step = 1 << (lls + 1)
+                    pw1 = w_kmn - (w_kmn % step)            # step 2b
+                    pw2 = pw1 + step
+                    cands = []
+                    for pw in (pw1, pw2):
+                        if _bitwidth(pw) <= maxbw:
+                            col[n] = pw
+                            cands.append((ev(mlp), pw))
+                    col[n] = w_kmn
+                    if not cands:
+                        continue
+                    cands.sort(reverse=True)
+                    ha_best, pw_best = cands[0]
+                    if ha_best >= bha:                       # step 2c
+                        col[n] = pw_best
+                        bha = ha_best
+                        replaced_total += 1
+                        improved_any = True
+                        continue
+                    # step 2d: bias nudging with the best candidate assumed
+                    col[n] = pw_best
+                    b_km = int(mlp.biases[k][m])
+                    committed = False
+                    for db in range(-bias_range, bias_range + 1):
+                        if db == 0:
+                            continue
+                        mlp.biases[k][m] = b_km + db
+                        ha = ev(mlp)
+                        if ha >= bha:
+                            bha = ha
+                            replaced_total += 1
+                            improved_any = True
+                            committed = True
+                            break
+                    if not committed:
+                        mlp.biases[k][m] = b_km
+                        col[n] = w_kmn
+        log.append((sweeps, replaced_total, bha))
+        if not improved_any:                          # step 4
+            break
+    return TuneResult(mlp=mlp, bha=bha, initial_ha=initial,
+                      replacements=replaced_total, sweeps=sweeps, log=log)

@@ -1,0 +1,3 @@
+from .ops import csd_expand, csd_matvec, qmatmul, quantize_pot  # noqa: F401
+from .flash_attention import flash_attention  # noqa: F401
+from .linear_scan import linear_scan  # noqa: F401

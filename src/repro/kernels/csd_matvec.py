@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: CSD shift-add CAVM evaluation (bit-exact ASIC datapath).
+
+The paper's multiplierless designs (Section V) evaluate y = C @ x as planes of
++-shifted adds over the CSD digits of C.  This kernel executes exactly that
+decomposition — weight matrix expanded into D digit planes p_d in {-1,0,1},
+y = sum_d (x @ p_d) << d — so the framework can simulate the synthesized
+hardware's integer arithmetic at tensor speed (e.g. hardware-accuracy
+evaluation inside the tuning loops for large validation sets).
+
+On a real TPU the MXU int8 path (qmatmul) beats digit planes for dense math;
+this kernel's value is bit-exact *hardware simulation*, not TPU roofline
+(DESIGN.md 2.4).  Grid: (M/bm, N/bn); the D digit planes are accumulated
+inside the kernel body with shifts applied as exact integer scaling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import csd
+
+__all__ = ["csd_expand", "csd_matvec_kernel", "csd_matvec"]
+
+
+def csd_expand(w_int: np.ndarray):
+    """(n, m) integer matrix -> (D, n, m) int8 digit planes, LSB first."""
+    w_int = np.asarray(w_int, dtype=np.int64)
+    digits = [[csd.to_csd(int(v)) for v in row] for row in w_int]
+    D = max((len(d) for row in digits for d in row), default=1)
+    D = max(D, 1)
+    planes = np.zeros((D,) + w_int.shape, dtype=np.int8)
+    for i, row in enumerate(digits):
+        for j, ds in enumerate(row):
+            for k, d in enumerate(ds):
+                planes[k, i, j] = d
+    return planes
+
+
+def _kernel(x_ref, p_ref, o_ref, *, n_digits: int):
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for d in range(n_digits):        # static unroll: one MXU pass per plane
+        plane = p_ref[d].astype(jnp.int32)
+        acc += jax.lax.dot_general(
+            x_ref[...].astype(jnp.int32), plane,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32) << d
+    o_ref[...] = acc
+
+
+def csd_matvec_kernel(x_int, planes, *, bm: int = 128, bn: int = 128,
+                      interpret: bool = False):
+    """y[b, j] = sum_d sum_k (x[b,k] * planes[d,k,j]) << d   (exact int32).
+
+    x_int: (M, K) int32 activations; planes: (D, K, N) int8.
+    M, N must tile by (bm, bn); K is kept whole per block (layer K is small
+    for the paper's MLPs; the ops wrapper pads & blocks larger K).
+    """
+    M, K = x_int.shape
+    D, K2, N = planes.shape
+    assert K == K2 and M % bm == 0 and N % bn == 0, (x_int.shape, planes.shape)
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_digits=D),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda m, n: (m, 0)),
+            pl.BlockSpec((D, K, bn), lambda m, n: (0, 0, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(x_int, planes)
+
+
+csd_matvec = csd_matvec_kernel

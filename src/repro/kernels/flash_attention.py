@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: flash attention (online softmax), causal/local, GQA.
+
+This is the TPU-native form of the pure-jnp chunked attention in
+``repro.nn.layers`` — same blocking scheme (the jnp version IS the schedule
+we validated numerically; this kernel is the deployment's inner loop).
+
+Grid: (B, Hq, Sq/bq, Skv/bk); the KV axis is innermost so the running
+(m, l, acc) online-softmax state lives in VMEM scratch across KV steps.
+Blocks are MXU-aligned; the GQA mapping selects the right KV head directly in
+the BlockSpec index map, so grouped heads never materialize repeated K/V
+(same lesson as S Perf iteration 4 in EXPERIMENTS.md).
+
+VMEM per program: q (bq, D) + k,v (bk, D) + acc (bq, D) f32 + stats —
+with bq = bk = 512, D = 128: ~0.8 MB, far under the 16 MB budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            n_kv: int, bq: int, bk: int, kv_len: int, offset: int,
+            causal: bool, window: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # offset aligns the causal frontier: q row i attends kv <= i + offset
+    # (offset = real_Skv - real_Sq; robust to padding)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offset
+    kv_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    run = True
+    if causal:
+        # skip fully-masked blocks: first kv position > last q position
+        run = (ki * bk) <= (qi * bq + bq - 1 + offset)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, :, 0, :]                       # (bq, D)
+        k = k_ref[0, :, 0, :]                       # (bk, D)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        mask = kv_pos < kv_len
+        if causal:
+            mask &= q_pos >= kv_pos
+        if window:
+            mask &= kv_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        o_ref[0, :, 0, :] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
+                           bq: int = 512, bk: int = 512,
+                           kv_len: int = None, offset: int = None,
+                           interpret: bool = False):
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); Hq % Hkv == 0.
+    Sq, Skv must tile by (bq, bk) — the ops wrapper pads.  kv_len = number of
+    valid kv rows; offset = real_Skv - real_Sq (causal alignment)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    kv_len = Skv if kv_len is None else kv_len
+    offset = (kv_len - Sq) if offset is None else offset
+    assert Hq % Hkv == 0 and Sq % bq == 0 and Skv % bk == 0
+    G = Hq // Hkv
+    n_kv = Skv // bk
+    grid = (B, Hq, Sq // bq, n_kv)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_kv=n_kv, bq=bq, bk=bk,
+                          kv_len=kv_len, offset=offset,
+                          causal=causal, window=window,
+                          scale=1.0 / np.sqrt(D)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 256, bk: int = 256, interpret=None):
+    """Padded wrapper (arbitrary Sq/Skv)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Sq, Hq, D = q.shape
+    Skv = k.shape[1]
+    bq = min(bq, max(8, Sq))
+    bk = min(bk, max(8, Skv))
+    pq = (-Sq) % bq
+    pk = (-Skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    out = flash_attention_kernel(qp, kp, vp, causal=causal, window=window,
+                                 bq=bq, bk=bk, kv_len=Skv,
+                                 offset=Skv - Sq, interpret=interpret)
+    return out[:, :Sq]

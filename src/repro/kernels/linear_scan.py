@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: fused gated linear recurrence  h_t = a_t * h_{t-1} + x_t.
+
+The inner loop of RG-LRU (recurrentgemma) and, with per-head outer products,
+RWKV-style linear attention.  The point of fusing (EXPERIMENTS.md note 3):
+the recurrent state stays in VMEM for the whole sequence block instead of
+round-tripping HBM every step — the pure-jnp ``lax.scan`` form would move
+B x W state bytes per timestep.
+
+Grid: (B, W/bw, S/bt); the SEQUENCE axis is innermost so the (bw,) state
+carries across time blocks in VMEM scratch.  Inside a block the recurrence
+runs as an unrolled/fori loop over bt steps of purely elementwise VPU work.
+
+VMEM per program: a, x blocks (bt, bw) + state (bw,): with bt=256, bw=512
+~= 1 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["linear_scan_kernel", "linear_scan"]
+
+
+def _kernel(a_ref, x_ref, o_ref, h_ref, *, bt: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0]                     # (bt, bw)
+    x = x_ref[0]
+
+    def step(t, h):
+        h = a[t] * h + x[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, bt, step, h_ref[...])
+    h_ref[...] = h
+
+
+def linear_scan_kernel(a, x, *, bt: int = 256, bw: int = 512,
+                       interpret: bool = False):
+    """a, x: (B, S, W) -> h: (B, S, W) with h_t = a_t * h_{t-1} + x_t,
+    h_{-1} = 0.  S % bt == 0 and W % bw == 0 (wrapper pads)."""
+    B, S, W = a.shape
+    assert x.shape == a.shape and S % bt == 0 and W % bw == 0
+    grid = (B, W // bw, S // bt)
+    return pl.pallas_call(
+        functools.partial(_kernel, bt=bt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bw), lambda b, w, t: (b, t, w)),
+            pl.BlockSpec((1, bt, bw), lambda b, w, t: (b, t, w)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bw), lambda b, w, t: (b, t, w)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def linear_scan(a, x, *, bt: int = 256, bw: int = 512, interpret=None):
+    """Padded wrapper: arbitrary (B, S, W)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, W = a.shape
+    bt = min(bt, max(8, S))
+    bw = min(bw, max(8, W))
+    ps = (-S) % bt
+    pw = (-W) % bw
+    # pad a with ONES on W (identity recurrence in padded lanes is fine since
+    # x pads with zeros -> h stays 0 there), zeros on time tail
+    ap = jnp.pad(a, ((0, 0), (0, ps), (0, pw)))
+    xp = jnp.pad(x, ((0, 0), (0, ps), (0, pw)))
+    h = linear_scan_kernel(ap, xp, bt=bt, bw=bw, interpret=interpret)
+    return h[:, :S, :W]
+
+
+def linear_scan_ref(a, x):
+    """Pure-jnp oracle (lax.scan)."""
+    def step(h, inp):
+        at, xt = inp
+        return at * h + xt, at * h + xt
+    a32 = a.astype(jnp.float32).transpose(1, 0, 2)
+    x32 = x.astype(jnp.float32).transpose(1, 0, 2)
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (a32, x32))
+    return hs.transpose(1, 0, 2)

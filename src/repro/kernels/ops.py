@@ -1,0 +1,79 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle arbitrary shapes by padding to the kernel's tile grid, pick interpret
+mode automatically on non-TPU backends (this container validates kernels in
+interpret mode; on TPU the same call sites compile to Mosaic), and expose the
+quantization helpers that connect the kernels to repro.quant.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .csd_matvec import csd_expand, csd_matvec_kernel
+from .qmatmul import qmatmul_kernel
+
+__all__ = ["qmatmul", "csd_matvec", "quantize_pot", "csd_expand"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def quantize_pot(w, *, bits: int = 8, axis: int = 0):
+    """Per-channel power-of-two-scale int8 quantization (paper IV-A per
+    channel): exp[n] = smallest e with max|w_n| * 2^e <= 2^(bits-1)-1 ...
+    returns (w_int8, exp) with w ~= w_int8 * 2^-exp, exp integer."""
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    qmax = 2.0 ** (bits - 1) - 1
+    # exact PoT exponent: floor(log2(qmax / amax))
+    exp = jnp.floor(jnp.log2(qmax / jnp.maximum(amax, 1e-30)))
+    w_q = jnp.clip(jnp.round(w * jnp.exp2(exp)), -qmax - 1, qmax)
+    return w_q.astype(jnp.int8), jnp.squeeze(exp, axis).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def qmatmul(x_i8, w_i8, exp_i32, *, bm: int = 256, bn: int = 256,
+            bk: int = 512, interpret: bool | None = None):
+    """Padded/jitted int8 PoT matmul. y = (x @ w) * 2^-exp, fp32 out."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    M, K = x_i8.shape
+    N = w_i8.shape[1]
+    bm_ = min(bm, max(8, M)) if M < bm else bm
+    xq = _pad_to(_pad_to(x_i8, bm_, 0), bk, 1)
+    wq = _pad_to(_pad_to(w_i8, bk, 0), bn, 1)
+    eq = _pad_to(exp_i32, bn, 0)
+    y = qmatmul_kernel(xq, wq, eq, bm=bm_, bn=bn, bk=bk,
+                       interpret=interpret)
+    return y[:M, :N]
+
+
+def csd_matvec(x_int, w_int=None, planes=None, *, bm: int = 128,
+               bn: int = 128, interpret: bool | None = None):
+    """Bit-exact shift-add CAVM: y = x @ W via CSD digit planes (int32)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    if planes is None:
+        planes = jnp.asarray(csd_expand(np.asarray(w_int)))
+    M, K = x_int.shape
+    N = planes.shape[2]
+    bm_ = min(bm, M) if M % bm else bm
+    xq = _pad_to(x_int.astype(jnp.int32), bm, 0)
+    pq = _pad_to(planes, bn, 2)
+    y = csd_matvec_kernel(xq, pq, bm=min(bm, xq.shape[0]), bn=bn,
+                          interpret=interpret)
+    return y[:M, :N]

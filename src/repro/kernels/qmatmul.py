@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: int8 x int8 -> int32 matmul with power-of-two dequant.
+
+This is the paper's core insight mapped to the MXU (DESIGN.md 2): weights are
+quantized with per-output-channel scales CONSTRAINED TO POWERS OF TWO (the
+paper's 2^q quantization generalized per-channel), so dequantization after the
+integer matmul is an exact exponent add — multiplier-free in the paper's ASIC
+sense, and exact (not approximate) in float.
+
+Tiling: grid (M/bm, N/bn, K/bk); K is the innermost (sequential) grid axis so
+the int32 accumulator lives in a VMEM scratch tile (bm, bn) across K steps.
+Block shapes are MXU-aligned multiples of 128; int8 operand tiles respect the
+(32, 128) minimum int8 tile. Default (bm, bn, bk) = (256, 256, 512):
+VMEM ~= bm*bk + bk*bn + 4*bm*bn = 128KB + 128KB + 256KB, well under 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["qmatmul_kernel", "qmatmul"]
+
+
+def _kernel(x_ref, w_ref, e_ref, o_ref, acc_ref, *, n_k: int):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        # power-of-two dequant: exact float multiply by 2^-e per channel
+        scale = jnp.exp2(-e_ref[...].astype(jnp.float32))   # (1, bn)
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * scale).astype(o_ref.dtype)
+
+
+def qmatmul_kernel(x_i8, w_i8, exp_i32, *, bm: int = 256, bn: int = 256,
+                   bk: int = 512, out_dtype=jnp.float32,
+                   interpret: bool = False):
+    """y[m, n] = (sum_k x[m,k] * w[k,n]) * 2^-exp[n]; shapes must tile evenly
+    (the ops.py wrapper pads arbitrary shapes)."""
+    M, K = x_i8.shape
+    K2, N = w_i8.shape
+    assert K == K2 and M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        (x_i8.shape, w_i8.shape, bm, bn, bk)
+    n_k = K // bk
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_i8, w_i8, exp_i32.reshape(1, N))
+
+
+qmatmul = qmatmul_kernel

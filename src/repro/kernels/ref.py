@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qmatmul_ref(x_i8, w_i8, exp_i32):
+    """Exact reference: int32 matmul then power-of-two dequant."""
+    acc = jnp.matmul(x_i8.astype(jnp.int32), w_i8.astype(jnp.int32))
+    return acc.astype(jnp.float32) * jnp.exp2(-exp_i32.astype(jnp.float32))
+
+
+def csd_matvec_ref(x_int, planes):
+    """Exact reference: sum_d (x @ plane_d) << d, all int32."""
+    acc = jnp.zeros((x_int.shape[0], planes.shape[2]), jnp.int32)
+    for d in range(planes.shape[0]):
+        acc = acc + (jnp.matmul(x_int.astype(jnp.int32),
+                                planes[d].astype(jnp.int32)) << d)
+    return acc
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """Exact (materialized) attention reference for the flash kernel."""
+    import numpy as np
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    n_rep = H // Hkv
+    kk = jnp.repeat(k, n_rep, axis=2)
+    vv = jnp.repeat(v, n_rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / np.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below may import jax.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the right step (train_step for train shapes, prefill/decode for
+     serving shapes) with ShapeDtypeStruct inputs — no allocation,
+  3. compiles, printing memory_analysis() (proves it fits) and
+     cost_analysis() (FLOPs/bytes for the roofline),
+  4. parses the compiled HLO for collective ops and sums their bytes,
+  5. appends a JSON record consumed by benchmarks/roofline.py and
+     EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out f.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.launch.mesh import TPU_V5E, make_production_mesh
+from repro.nn.types import SHAPES, applicable_shapes, get_config, list_configs
+from repro.runtime.step import jit_cell
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of an HLO shape literal like 'bf16[8,128,2048]{2,1,0}'."""
+    m = re.match(r"([a-z]+[0-9]+|pred)\[([0-9,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective in (SPMD-partitioned) HLO.
+
+    Shapes in the partitioned module are per-device, so the sums are bytes
+    moved per device — which is what the ICI roofline term wants.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (\(?[^)=]*\)?) ([\w\-]+)\(", s)
+        if not m:
+            continue
+        shape_part, opname = m.groups()
+        base = opname.split(".")[0]
+        # map fused/start variants: all-gather-start, all-reduce-start etc.
+        for c in _COLLECTIVES:
+            if base == c or base == c + "-start":
+                shapes = re.findall(r"(?:[a-z]+[0-9]+|pred)\[[0-9,]*\]",
+                                    shape_part)
+                out[c] += sum(_shape_bytes(x) for x in shapes)
+                count[c] += 1
+                break
+    return {"bytes": out, "counts": count,
+            "total_bytes": int(sum(out.values()))}
+
+
+def roofline(cost: dict, coll: dict, n_chips: int, model_flops: float) -> dict:
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    # cost_analysis of the partitioned module is per-device already
+    t_compute = hlo_flops / TPU_V5E["peak_bf16_flops"]
+    t_memory = hlo_bytes / TPU_V5E["hbm_bw"]
+    t_coll = coll["total_bytes"] / TPU_V5E["ici_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful = model_flops / n_chips / TPU_V5E["peak_bf16_flops"]
+    return {
+        **terms,
+        "dominant": dominant,
+        "hlo_flops_per_chip": hlo_flops,
+        "hlo_bytes_per_chip": hlo_bytes,
+        "collective_bytes_per_chip": coll["total_bytes"],
+        "model_flops_total": model_flops,
+        "model_vs_hlo_flops": (model_flops / n_chips) / max(hlo_flops, 1.0),
+        "roofline_fraction": useful / max(bound, 1e-12),
+    }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N per token (decode)."""
+    n = cfg.active_params_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch          # decode: one token
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                verbose: bool = True, block_sizes=None,
+                probe: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips}
+    t0 = time.time()
+    with mesh:
+        cell = jit_cell(cfg, shape, mesh, block_sizes=block_sizes)
+        lowered = cell.fn.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # CPU backend may not implement all fields
+        rec["memory"] = {"error": str(e)}
+    cost = compiled.cost_analysis() or {}
+    rec["cost"] = {k: float(v) for k, v in cost.items()
+                   if isinstance(v, (int, float)) and k in
+                   ("flops", "bytes accessed", "transcendentals")}
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    rec["collectives"] = coll
+    if probe:
+        # loop-free probe modules give exact per-device counts (the scanned
+        # module undercounts while-loop bodies; see module docstring of
+        # repro.launch.probe)
+        from repro.launch.probe import probe_cell
+        pc = probe_cell(cfg, shape, mesh)
+        rec["probe"] = pc
+        rec["roofline"] = roofline(
+            {"flops": pc["flops"], "bytes accessed": pc["bytes"]},
+            {"total_bytes": pc["coll_bytes"]}, n_chips,
+            model_flops_for(cfg, shape))
+    else:
+        rec["roofline"] = roofline(rec["cost"], coll, n_chips,
+                                   model_flops_for(cfg, shape))
+    rec["lower_s"] = round(t_lower, 1)
+    rec["compile_s"] = round(t_compile, 1)
+    if verbose:
+        r = rec["roofline"]
+        print(f"[dryrun] {arch:18s} {shape_name:12s} {rec['mesh']:8s} "
+              f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+              f"coll={r['collective_s']:.4f}s dominant={r['dominant']:10s} "
+              f"frac={r['roofline_fraction']:.3f} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)", flush=True)
+        print(f"         memory_analysis: {rec['memory']}", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    ap.add_argument("--probe", action="store_true",
+                    help="probe-based roofline (single-pod cells)")
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = [a for a in list_configs()] if args.all else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([SHAPES[args.shape]] if args.shape
+                  else applicable_shapes(cfg))
+        for s in shapes:
+            meshes = [False, True] if args.both_meshes else [args.multi_pod]
+            for mp in meshes:
+                cells.append((arch, s.name, mp))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_fail = 0
+    with open(args.out, "a") as f:
+        for arch, sname, mp in cells:
+            try:
+                rec = dryrun_cell(arch, sname, multi_pod=mp,
+                                  probe=args.probe and not mp)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": sname,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": f"{type(e).__name__}: {e}"}
+                n_fail += 1
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+    print(f"[dryrun] done: {len(cells) - n_fail}/{len(cells)} cells OK")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""Production mesh factory.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  The dry-run sets XLA_FLAGS to fabricate 512 host
+devices BEFORE importing jax; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "TPU_V5E"]
+
+# TPU v5e hardware constants used by the roofline analysis (per chip)
+TPU_V5E = {
+    "peak_bf16_flops": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_bw": 50e9,              # B/s per link
+    "hbm_bytes": 16e9,
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over actual local devices (CPU smoke tests)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    return jax.make_mesh((data, max(1, min(model, n // data))),
+                         ("data", "model"))

@@ -1,0 +1,325 @@
+"""Probe-based roofline accounting.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE, so the scanned full
+module undercounts FLOPs/bytes by ~n_layers (verified in EXPERIMENTS.md
+Dry-run notes).  This module therefore lowers LOOP-FREE probe modules — one
+transformer layer, the embed+loss stem, the optimizer update — under the same
+mesh and shardings as the real module, reads their exact per-device
+cost_analysis + collective bytes, and combines:
+
+    total = n_layers * layer + stem + optimizer(train only)
+
+Known residual undercount (documented, small): the *time* scans inside RWKV6 /
+RG-LRU layers still count their elementwise state update once per sequence.
+Their matmuls (the FLOP mass) sit outside the time scan and are counted
+exactly; the state-update HBM traffic would be held in VMEM by any fused
+production kernel, so excluding it matches the optimized implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import shard
+from repro.launch.dryrun import collective_bytes
+from repro.launch.specs import cache_struct, input_specs, param_structs
+from repro.nn.model import Model
+from repro.nn.types import ArchConfig, ShapeSpec
+from repro.runtime.step import default_optimizer
+from repro.optim.adamw import clip_by_global_norm
+
+__all__ = ["probe_cell"]
+
+
+def _strip_lead(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tree)
+
+
+def _compile_probe(fn, args_sds, in_specs, mesh):
+    shardings = tuple(shard.named(mesh, s) for s in in_specs)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=shardings).lower(*args_sds).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll_bytes": float(coll["total_bytes"])}
+
+
+def _zero_cost():
+    return {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0}
+
+
+def _acc(total, part, mult=1.0):
+    for k in total:
+        total[k] += part[k] * mult
+    return total
+
+
+def _layer_units(cfg: ArchConfig, m: Model):
+    """[(count, layer_fn(pl, x) -> y, params_key)] per family (train/prefill)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return [(cfg.n_layers,
+                 lambda pl, x: m._decoder_block(pl, x)[0], "layers")]
+    if cfg.family == "ssm":
+        return [(cfg.n_layers,
+                 lambda pl, x: m._ssm_block(pl, x)[0], "layers")]
+    if cfg.family == "hybrid":
+        units = [(cfg.n_layers // 3,
+                  lambda pl, x: m._hybrid_unit(pl, x)[0], "layers")]
+        return units
+    if cfg.family == "audio":
+        from repro.nn import blocks
+        from repro.nn.layers import rms_norm
+
+        def enc_layer(pl, x):
+            h = rms_norm(x, pl["ln1"].astype(x.dtype), cfg.norm_eps)
+            h2 = x + blocks.attention_seq(pl["attn"], h, cfg, causal=False)
+            h = rms_norm(h2, pl["ln2"].astype(h2.dtype), cfg.norm_eps)
+            return h2 + blocks.mlp_apply(pl["mlp"], h)
+
+        def dec_layer(pl, xe):
+            x, enc = xe
+            B, F = enc.shape[0], enc.shape[1]
+            hd = cfg.head_dim_
+            h = rms_norm(x, pl["ln1"].astype(x.dtype), cfg.norm_eps)
+            x = x + blocks.attention_seq(pl["attn"], h, cfg)
+            h = rms_norm(x, pl["ln_x"].astype(x.dtype), cfg.norm_eps)
+            ck, cv = blocks.kv_proj(pl["xattn"], enc, cfg)
+            x = x + blocks.attention_seq(pl["xattn"], h, cfg, causal=False,
+                                         kv_override=(ck, cv))
+            h = rms_norm(x, pl["ln2"].astype(x.dtype), cfg.norm_eps)
+            return x + blocks.mlp_apply(pl["mlp"], h)
+
+        return [(cfg.n_enc_layers, enc_layer, "enc_layers"),
+                (cfg.n_layers, dec_layer, "layers")]
+    raise ValueError(cfg.family)
+
+
+def probe_cell(cfg: ArchConfig, shape: ShapeSpec, mesh) -> dict:
+    """Per-device {flops, bytes, coll_bytes} for one cell, probe-composed."""
+    m = Model(cfg)
+    import numpy as _np
+    n_chips = int(_np.prod(list(mesh.shape.values())))
+    ep = bool(cfg.n_experts) and cfg.n_experts % mesh.shape["model"] == 0
+    if ep:
+        # the EP axis carries experts; batch stays on the data axes
+        ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    else:
+        ba = shard.batch_axes(mesh, shape.global_batch)
+    # FSDP requires the batch to cover EVERY mesh axis, else the uncovered
+    # axis duplicates compute (S Perf iterations 13/17); fall back to TP.
+    fsdp_ok = (shape.kind == "train" and not ep
+               and shape.global_batch % n_chips == 0)
+    param_mode = "train" if fsdp_ok else         ("decode" if shape.kind == "decode" else "prefill")
+    nb = int(np.prod([mesh.shape[a] for a in ba]))
+    if shape.global_batch % nb == 0:
+        m.batch_axes = ba
+    if shape.kind == "decode" and cfg.n_heads:
+        C = min(shape.seq_len, cfg.local_window) if cfg.local_window \
+            else shape.seq_len
+        if C > 1024 and C % mesh.shape["model"] == 0:
+            m.kv_seq_axis = "model"
+    if ep:
+        m.ep_axis = "model"
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    p_sds = param_structs(cfg)
+    p_spec_full = shard.param_specs(mesh, p_sds, mode=param_mode, ep=ep)
+    x_spec = P(ba if shape.global_batch % nb == 0 else None, None, None)
+    total = _zero_cost()
+
+    if shape.kind in ("train", "prefill"):
+        Sx = S if cfg.family != "vlm" else S           # concat length == S
+        x_sds = jax.ShapeDtypeStruct((B, Sx, d), dt)
+        units = _layer_units(cfg, m)
+        for count, fn, key in units:
+            pl_sds = _strip_lead(p_sds[key])
+            pl_spec = _strip_lead_spec(p_spec_full[key])
+            if cfg.family == "audio" and key == "layers":
+                enc_sds = jax.ShapeDtypeStruct((B, cfg.n_frames, d), dt)
+                f_train = (lambda pl, x, e:
+                           _scalar(fn(pl, (x, e))))
+                args = (pl_sds, x_sds, enc_sds)
+                specs = (pl_spec, x_spec, x_spec)
+            else:
+                f_train = lambda pl, x, fn=fn: _scalar(fn(pl, x))
+                args = (pl_sds, x_sds)
+                specs = (pl_spec, x_spec)
+            if shape.kind == "train":
+                # match the real module: remat recomputes the layer forward
+                # inside the backward, and XLA must count that recompute
+                fr = jax.checkpoint(f_train) if cfg.remat else f_train
+                g = lambda *a, f=fr: jax.grad(f, argnums=(0, 1))(*a)
+                part = _compile_probe(g, args, specs, mesh)
+            else:
+                part = _compile_probe(f_train, args, specs, mesh)
+            _acc(total, part, count)
+        # hybrid tail layers: 2 extra RG-LRU blocks = 2/3 of a unit's rg+mlp
+        if cfg.family == "hybrid" and cfg.n_layers % 3:
+            _acc(total, part, (cfg.n_layers % 3) / 3.0 * 1.0)
+
+        # stem: embedding + (train: chunked xent + optimizer)
+        stem_keys = ["embed", "final_norm", "lm_head"] + (
+            ["vision_proj"] if cfg.family == "vlm" else [])
+        sp_sds = {k: p_sds[k] for k in stem_keys}
+        sp_spec = {k: p_spec_full[k] for k in stem_keys}
+        b_sds = input_specs(cfg, shape, with_labels=(shape.kind == "train"))
+        b_spec = shard.batch_specs(mesh, b_sds)
+
+        if shape.kind == "train":
+            def stem(sp, batch, x):
+                xe, labels, mask = m._embed_inputs(
+                    {**sp, "layers": None}, batch)
+                reg = (xe.astype(jnp.float32) * 0).sum()
+                out = m._xent(sp, x, labels, mask)
+                return out + reg
+            g = jax.grad(stem, argnums=(0, 2))
+            part = _compile_probe(g, (sp_sds, b_sds, x_sds),
+                                  (sp_spec, b_spec, x_spec), mesh)
+        else:
+            def stem(sp, batch, x):
+                xe, _, _ = m._embed_inputs({**sp, "layers": None}, batch)
+                logits = x[:, -1:] @ sp["lm_head"].astype(x.dtype)
+                return _scalar(logits) + (xe.astype(jnp.float32) * 0).sum()
+            part = _compile_probe(stem, (sp_sds, b_sds, x_sds),
+                                  (sp_spec, b_spec, x_spec), mesh)
+        _acc(total, part)
+
+        if shape.kind == "train":
+            opt = default_optimizer(cfg)
+            o_sds = jax.eval_shape(opt.init, p_sds)
+            o_spec = shard.opt_specs(mesh, p_sds, ep=ep)
+
+            def opt_probe(params, state, grads):
+                grads, _ = clip_by_global_norm(grads, 1.0)
+                return opt.apply(params, state, grads)
+            part = _compile_probe(
+                opt_probe, (p_sds, o_sds, p_sds),
+                (p_spec_full, o_spec, p_spec_full), mesh)
+            _acc(total, part)
+        return total
+
+    # ---- decode ----
+    c_sds = cache_struct(cfg, shape)
+    c_spec = shard.cache_specs(mesh, c_sds)
+    x_sds = jax.ShapeDtypeStruct((B, 1, d), dt)
+    x1_spec = P(ba if shape.global_batch % nb == 0 else None, None, None)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    fams = _decode_units(cfg, m)
+    for count, fn, key, cache_keys in fams:
+        pl_sds = _strip_lead(p_sds[key])
+        pl_spec = _strip_lead_spec(p_spec_full[key])
+        cs_sds = {k: jax.ShapeDtypeStruct(c_sds[k].shape[1:], c_sds[k].dtype)
+                  for k in cache_keys}
+        cs_spec = {k: _drop_first(c_spec[k]) for k in cache_keys}
+        part = _compile_probe(fn, (pl_sds, cs_sds, x_sds, pos_sds),
+                              (pl_spec, cs_spec, x1_spec, P()), mesh)
+        _acc(total, part, count)
+
+    # stem: embed one token + full-vocab logits
+    def stem(emb, head, tok, x):
+        xe = emb.astype(dt)[tok]
+        return _scalar(x @ head.astype(dt)) + (xe.astype(jnp.float32) * 0).sum()
+    part = _compile_probe(
+        stem,
+        (p_sds["embed"], p_sds["lm_head"],
+         jax.ShapeDtypeStruct((B, 1), jnp.int32), x_sds),
+        (p_spec_full["embed"], p_spec_full["lm_head"],
+         P(ba if B % nb == 0 else None, None), x1_spec), mesh)
+    _acc(total, part)
+    return total
+
+
+def _scalar(y):
+    return y.astype(jnp.float32).sum()
+
+
+def _strip_lead_spec(spec_tree):
+    return jax.tree.map(lambda s: P(*s[1:]) if len(s) else s, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _drop_first(spec):
+    return P(*spec[1:]) if len(spec) else spec
+
+
+def _decode_units(cfg: ArchConfig, m: Model):
+    """[(count, fn(pl, cache_slice, x, pos), params_key, cache_keys)]."""
+    from repro.nn import blocks
+    from repro.nn.layers import rms_norm, decode_attention
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def f(pl, st, x, pos):
+            hn = rms_norm(x, pl["ln1"].astype(x.dtype), cfg.norm_eps)
+            a, kv2 = blocks.attention_step(pl["attn"], hn, st, pos, cfg,
+                                           pin=m._pin_kv, pin_q=m._pin_rep)
+            h = x + a
+            hn = rms_norm(h, pl["ln2"].astype(h.dtype), cfg.norm_eps)
+            if cfg.n_experts:
+                y, _ = blocks.moe_apply(pl["moe"], hn, cfg,
+                                        pins=m._moe_pins())
+            else:
+                y = blocks.mlp_apply(pl["mlp"], hn)
+            return _scalar(h + y) + _scalar(kv2["k"]) * 0
+        return [(cfg.n_layers, f, "layers", ("k", "v"))]
+    if cfg.family == "ssm":
+        def f(pl, st, x, pos):
+            hn = rms_norm(x, jnp.zeros((), x.dtype), cfg.norm_eps)
+            y, state, tm = blocks.rwkv_time_mix_seq(
+                pl, hn, cfg, st["state"], st["tm_prev"])
+            h = x + y
+            hn = rms_norm(h, jnp.zeros((), h.dtype), cfg.norm_eps)
+            y, cm = blocks.rwkv_channel_mix(pl, hn, st["cm_prev"])
+            return _scalar(h + y) + _scalar(state) * 0
+        return [(cfg.n_layers, f, "layers",
+                 ("state", "tm_prev", "cm_prev"))]
+    if cfg.family == "hybrid":
+        def f(pl, st, x, pos):
+            ln = pl["ln"]
+            y, h1, c1 = blocks.rglru_seq(
+                pl["rg1"], rms_norm(x, ln[0].astype(x.dtype), cfg.norm_eps),
+                cfg, st["h1"], st["c1"])
+            h = x + y
+            h = h + blocks.mlp_apply(
+                pl["mlp1"], rms_norm(h, ln[1].astype(h.dtype), cfg.norm_eps))
+            y, h2, c2 = blocks.rglru_seq(
+                pl["rg2"], rms_norm(h, ln[2].astype(h.dtype), cfg.norm_eps),
+                cfg, st["h2"], st["c2"])
+            h = h + y
+            h = h + blocks.mlp_apply(
+                pl["mlp2"], rms_norm(h, ln[3].astype(h.dtype), cfg.norm_eps))
+            a, kv2 = blocks.attention_step(
+                pl["attn"], rms_norm(h, ln[4].astype(h.dtype), cfg.norm_eps),
+                {"k": st["k"], "v": st["v"]}, pos, cfg,
+                window=cfg.local_window, pin=m._pin_kv, pin_q=m._pin_rep)
+            h = h + a
+            h = h + blocks.mlp_apply(
+                pl["mlp3"], rms_norm(h, ln[5].astype(h.dtype), cfg.norm_eps))
+            return _scalar(h) + _scalar(kv2["k"]) * 0 + _scalar(h1) * 0
+        return [(cfg.n_layers // 3, f, "layers",
+                 ("h1", "c1", "h2", "c2", "k", "v"))]
+    if cfg.family == "audio":
+        def f(pl, st, x, pos):
+            hn = rms_norm(x, pl["ln1"].astype(x.dtype), cfg.norm_eps)
+            a, kv2 = blocks.attention_step(
+                pl["attn"], hn, {"k": st["k"], "v": st["v"]}, pos, cfg,
+                pin=m._pin_kv, pin_q=m._pin_rep)
+            h = x + a
+            hn = rms_norm(h, pl["ln_x"].astype(h.dtype), cfg.norm_eps)
+            B = hn.shape[0]
+            q, _, _ = blocks._qkv(pl["xattn"], hn, cfg)
+            xa = decode_attention(q, st["cross_k"], st["cross_v"],
+                                  st["cross_k"].shape[1])
+            h = h + xa.reshape(B, 1, -1) @ pl["xattn"]["wo"].astype(h.dtype)
+            hn = rms_norm(h, pl["ln2"].astype(h.dtype), cfg.norm_eps)
+            return _scalar(h + blocks.mlp_apply(pl["mlp"], hn)) \
+                + _scalar(kv2["k"]) * 0
+        return [(cfg.n_layers, f, "layers",
+                 ("k", "v", "cross_k", "cross_v"))]
+    raise ValueError(cfg.family)

@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+Used by the dry-run (lower + compile, no allocation) and by the benchmark
+harness.  Modality frontends are stubs per the assignment: VLM cells get
+precomputed patch embeddings, audio cells get precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.model import Model
+from repro.nn.types import ArchConfig, ShapeSpec
+
+__all__ = ["input_specs", "cache_struct", "param_structs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, *, with_labels=None):
+    """Batch pytree of ShapeDtypeStructs for one cell.
+
+    train  -> full train batch (tokens + labels [+ modality stubs])
+    prefill-> prompt batch (no labels)
+    decode -> (tokens (B,1), pos scalar); the cache comes from cache_struct.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    if with_labels is None:
+        with_labels = kind == "train"
+
+    if kind == "decode":
+        return {"tokens": _sds((B, 1), jnp.int32)}
+
+    batch = {}
+    if cfg.family == "vlm":
+        P = cfg.n_patches
+        batch["patch_embeds"] = _sds((B, P, 1024), cfg.dtype)
+        batch["tokens"] = _sds((B, S - P), jnp.int32)
+        if with_labels:
+            batch["labels"] = _sds((B, S - P), jnp.int32)
+    elif cfg.family == "audio":
+        batch["frames"] = _sds((B, cfg.n_frames, cfg.d_model), cfg.dtype)
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        if with_labels:
+            batch["labels"] = _sds((B, S), jnp.int32)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        if with_labels:
+            batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def cache_struct(cfg: ArchConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct pytree of the decode cache for this cell."""
+    m = Model(cfg)
+    return m.init_cache(shape.global_batch, shape.seq_len, zeros=_sds)
+
+
+def param_structs(cfg: ArchConfig):
+    m = Model(cfg)
+    return jax.eval_shape(lambda: m.init(jax.random.PRNGKey(0)))

@@ -1,0 +1,74 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Selects any assigned architecture config, optionally scales it down
+(--layers/--d-model/... overrides), builds the sharded train step against the
+local or production mesh, and runs the fault-tolerant loop.  On this CPU
+container it is used with reduced sizes; on a TPU fleet the same entry point
+runs the full configs (mesh picked by --mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.tokens import TokenPipeline
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.nn import Model, get_config
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.optim.compress import pot_compressor
+from repro.runtime.step import make_train_step
+from repro.runtime.train import TrainConfig, TrainLoop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test-sized config")
+    ap.add_argument("--mesh", choices=["local", "pod", "multipod"],
+                    default="local")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--vocab", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.vocab:
+        cfg = dataclasses.replace(cfg, vocab=args.vocab)
+    model = Model(cfg)
+    mesh = {"local": make_local_mesh,
+            "pod": make_production_mesh,
+            "multipod": lambda: make_production_mesh(multi_pod=True)}[
+        args.mesh]()
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=args.lr, state_dtype=cfg.opt_state_dtype,
+                schedule=cosine_schedule(args.lr, 20, args.steps))
+    opt_state = opt.init(params)
+    compressor = pot_compressor() if args.compress_grads else None
+    step = jax.jit(make_train_step(model, opt, compressor=compressor),
+                   donate_argnums=(0, 1))
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch)
+    loop = TrainLoop(TrainConfig(total_steps=args.steps,
+                                 ckpt_every=args.ckpt_every,
+                                 ckpt_dir=args.ckpt_dir),
+                     step, pipe)
+    with mesh:
+        loop.run(params, opt_state)
+    for rec in loop.metrics_log:
+        print(rec)
+
+
+if __name__ == "__main__":
+    main()

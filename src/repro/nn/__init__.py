@@ -1,0 +1,3 @@
+from .model import Model  # noqa: F401
+from .types import (SHAPES, ArchConfig, ShapeSpec, applicable_shapes,  # noqa: F401
+                    get_config, list_configs, register)

@@ -1,0 +1,407 @@
+"""Blocks: attention / dense-FFN / MoE / RWKV6 / RG-LRU, in init+apply style.
+
+Each block has ``init_*`` returning a param dict, ``*_seq`` (full-sequence:
+training and prefill) and ``*_step`` (single-token decode with explicit
+cache).  Caches are plain dicts of arrays so they can be given ShapeDtype
+stand-ins by the dry-run and sharded by path rules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import (chunked_attention, decode_attention, rms_norm, rope,
+                     swiglu)
+from .types import ArchConfig
+
+
+def _norm(key, d):
+    return jnp.zeros((d,), jnp.float32)
+
+
+def _dense(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale or 1.0 / np.sqrt(fan_in)
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Attention (full or local window), GQA + optional QKV bias
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, cross: bool = False):
+    """Separate wq/wk/wv (S Perf iteration 14): a fused QKV weight was tried
+    (iteration 7, ~10% collective win on TP-dense training) but its sliced
+    output crosses shard boundaries under tensor-parallel prefill/decode and
+    GSPMD regathers the projections; with training now on FSDP (iteration 9)
+    the fusion no longer pays its way."""
+    hd = cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense(ks[0], (cfg.d_model, cfg.n_heads * hd)),
+        "wk": _dense(ks[1], (cfg.d_model, cfg.n_kv_heads * hd)),
+        "wv": _dense(ks[2], (cfg.d_model, cfg.n_kv_heads * hd)),
+        "wo": _dense(ks[3], (cfg.n_heads * hd, cfg.d_model)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+    return p
+
+
+def _qkv(p, x, cfg: ArchConfig):
+    hd = cfg.head_dim_
+    B, S, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def kv_proj(p, src, cfg: ArchConfig):
+    """K/V of ``src`` (cross-attention KV projection)."""
+    hd = cfg.head_dim_
+    B, F, _ = src.shape
+    k = src @ p["wk"].astype(src.dtype)
+    v = src @ p["wv"].astype(src.dtype)
+    if "bk" in p:
+        k = k + p["bk"].astype(src.dtype)
+        v = v + p["bv"].astype(src.dtype)
+    return (k.reshape(B, F, cfg.n_kv_heads, hd),
+            v.reshape(B, F, cfg.n_kv_heads, hd))
+
+
+def attention_seq(p, x, cfg: ArchConfig, *, positions=None, window: int = 0,
+                  causal: bool = True, kv_override=None,
+                  block_q: int = 512, block_kv: int = 512):
+    """Full-sequence attention; kv_override supplies cross-attention K/V."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, x, cfg)
+    if kv_override is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override   # cross-attention: no rope (absolute alignment)
+    out = chunked_attention(q, k, v, causal=causal and kv_override is None,
+                            window=window, block_q=block_q, block_kv=block_kv)
+    return out.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+
+
+def attention_step(p, x, cache, pos, cfg: ArchConfig, *, window: int = 0,
+                   pin=None, pin_q=None):
+    """One decode token. cache: {k: (B,C,Hkv,D), v: ...}; pos: scalar int.
+
+    Full attention: C = max context, write index = pos.
+    Local attention: C = window, ring buffer, write index = pos % C.
+    ``pin`` (from Model._pin_kv) re-asserts the sequence-sharded cache layout
+    after the update so GSPMD keeps the cache resident and runs the softmax
+    distributed over sequence shards (EXPERIMENTS.md S Perf iteration 3).
+    """
+    B = x.shape[0]
+    hd = cfg.head_dim_
+    q, k, v = _qkv(p, x, cfg)
+    posv = jnp.full((B, 1), pos)
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+    C = cache["k"].shape[1]
+    slot = pos % C
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    if pin is not None:
+        k_cache, v_cache = pin(k_cache), pin(v_cache)
+    if pin_q is not None:
+        # keep q replicated over the model axis: otherwise the attention
+        # einsum inherits head-sharding from wq and GSPMD all-gathers the
+        # seq-sharded cache every layer (S Perf iteration 4)
+        q = pin_q(q)
+    cache_len = jnp.minimum(pos + 1, C)
+    out = decode_attention(q, k_cache, v_cache, cache_len, window=0)
+    out = out.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, context: int, *,
+                    window: int = 0, dtype=jnp.bfloat16):
+    C = min(context, window) if window else context
+    hd = cfg.head_dim_
+    shape = (batch, C, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (swiglu)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int):
+    ks = jax.random.split(key, 3)
+    return {"wg": _dense(ks[0], (d, f)), "wu": _dense(ks[1], (d, f)),
+            "wd": _dense(ks[2], (f, d))}
+
+
+def mlp_apply(p, x):
+    return swiglu(x, p["wg"].astype(x.dtype), p["wu"].astype(x.dtype),
+                  p["wd"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN: top-k routing, capacity-bounded gather dispatch (EP-shardable)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ArchConfig):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": _dense(ks[0], (d, E)),
+        "wg": _dense(ks[1], (E, d, f)),
+        "wu": _dense(ks[2], (E, d, f)),
+        "wd": _dense(ks[3], (E, f, d)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * cfg.n_shared_experts)
+    if cfg.moe_dense_residual:
+        p["dense"] = init_mlp(ks[5], d, cfg.dense_ff)
+    return p
+
+
+def moe_apply(p, x, cfg: ArchConfig, pins=None):
+    """x: (B, S, d). Capacity-bounded top-k dispatch via gather/scatter.
+
+    Tokens beyond an expert's capacity C = ceil(cf * S * k / E) are dropped
+    (standard GShard-style), keeping the dispatched tensor (B, E, C, d)
+    statically shaped and EP-shardable over the "model" axis.
+
+    ``pins`` = (pin_expert, pin_token) from Model._moe_pins: without explicit
+    layout pins GSPMD replicates the (B, E, C, d) dispatch tensors per device
+    (S Perf iterations 5-6: 43.3 s -> collective term on arctic train_4k).
+    pin_expert pins E over the EP axis; pin_token pins batch-only layouts.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(4, int(np.ceil(cfg.capacity_factor * S * K / E)))
+    C = min(C, S)
+
+    # router matmul in model dtype; only the (B,S,E) logits go to f32 —
+    # casting x itself materialized a f32 activation copy (S Perf iter. 6)
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)   # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)                  # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert's capacity
+    flat_e = expert_idx.reshape(B, S * K)                            # (B,SK)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)              # (B,SK,E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) * onehot                   # 1-based
+    pos = (jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=-1)
+           .squeeze(-1) - 1)                                         # (B,SK)
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)                  # drop slot
+
+    # scatter token indices into (B, E*C+1) slot table
+    token_of_sk = jnp.broadcast_to(jnp.arange(S)[:, None], (S, K)).reshape(S * K)
+    slot_table = jnp.full((B, E * C + 1), 0, jnp.int32)
+    slot_table = slot_table.at[jnp.arange(B)[:, None], slot].set(
+        token_of_sk[None, :], mode="drop")
+    slot_filled = jnp.zeros((B, E * C + 1), jnp.bool_).at[
+        jnp.arange(B)[:, None], slot].set(True, mode="drop")
+    idx = slot_table[:, :E * C].reshape(B, E, C)
+    filled = slot_filled[:, :E * C].reshape(B, E, C)
+
+    if S == 1:
+        # decode: the train-oriented pins replicate the expert inner dim and
+        # force per-token wd regathers (arctic decode +1.1 GB/layer measured);
+        # at S=1 GSPMD's propagation is already optimal
+        pins = None
+    pin_e, pin_tok = pins if pins is not None else (None, None)
+    xe = jnp.take_along_axis(
+        x[:, None, :, :], idx[..., None], axis=2)                    # (B,E,C,d)
+    xe = jnp.where(filled[..., None], xe, 0)
+    if pin_e is not None:
+        xe = pin_e(xe)
+    h = jnp.einsum("becd,edf->becf", xe, p["wg"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", xe, p["wu"].astype(x.dtype))
+    if pin_e is not None:
+        h, u = pin_e(h), pin_e(u)
+    ye = jnp.einsum("becf,efd->becd", jax.nn.silu(h) * u,
+                    p["wd"].astype(x.dtype))                         # (B,E,C,d)
+    if pin_e is not None:
+        ye = pin_e(ye)
+
+    # combine: gather each (token, k)'s expert output back
+    ye_flat = ye.reshape(B, E * C, d)
+    ye_flat = jnp.concatenate(
+        [ye_flat, jnp.zeros((B, 1, d), ye.dtype)], axis=1)           # drop row
+    tok_out = jnp.take_along_axis(
+        ye_flat, slot[..., None], axis=1).reshape(B, S, K, d)
+    if pin_tok is not None:
+        tok_out = pin_tok(tok_out)
+    y = jnp.einsum("bskd,bsk->bsd", tok_out,
+                   gate_vals.astype(tok_out.dtype) * keep.reshape(B, S, K))
+    if pin_tok is not None:
+        y = pin_tok(y)
+
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x)
+    if cfg.moe_dense_residual:
+        y = y + mlp_apply(p["dense"], x)
+    # auxiliary load-balance loss (Switch): E * sum(f_e * p_e)
+    frac = jnp.mean(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32),
+                    axis=(0, 1, 2))
+    imp = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * imp)
+    return y.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 ("Finch"): data-dependent decay linear attention + channel mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv(key, cfg: ArchConfig):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    ks = jax.random.split(key, 10)
+    lora = 64
+    return {
+        "mu": jnp.full((5, d), 0.5, jnp.float32),      # r,k,v,g,w token-shift
+        "wr": _dense(ks[0], (d, d)), "wk": _dense(ks[1], (d, d)),
+        "wv": _dense(ks[2], (d, d)), "wg": _dense(ks[3], (d, d)),
+        "wo": _dense(ks[4], (d, d)),
+        "w0": jnp.full((d,), -6.0, jnp.float32),        # decay base
+        "wA": _dense(ks[5], (d, lora)), "wB": _dense(ks[6], (lora, d)),
+        "u": jnp.zeros((H, hd), jnp.float32),           # bonus
+        "ln_x": jnp.zeros((d,), jnp.float32),
+        "cm_mu": jnp.full((2, d), 0.5, jnp.float32),
+        "cm_k": _dense(ks[7], (d, cfg.d_ff)),
+        "cm_v": _dense(ks[8], (cfg.d_ff, d)),
+    }
+
+
+def _rwkv_proj(p, x, x_prev, cfg):
+    """Token-shift mixes + projections. x: (B,S,d); x_prev: previous token."""
+    mu = p["mu"].astype(x.dtype)
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)  # shifted
+    mix = [x + (xs - x) * mu[i] for i in range(5)]
+    r = mix[0] @ p["wr"].astype(x.dtype)
+    k = mix[1] @ p["wk"].astype(x.dtype)
+    v = mix[2] @ p["wv"].astype(x.dtype)
+    g = jax.nn.silu(mix[3] @ p["wg"].astype(x.dtype))
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(x)))
+    dd = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(mix[4].astype(jnp.float32) @ p["wA"].astype(jnp.float32))
+        @ p["wB"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dd))                                    # (B,S,d)
+    return r, k, v, g, w
+
+
+def rwkv_time_mix_seq(p, x, cfg: ArchConfig, state=None, x_prev=None):
+    """Sequential scan over time. state: (B,H,hd,hd); returns y, new state."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    r, k, v, g, w = _rwkv_proj(p, x, x_prev, cfg)
+    rh = r.reshape(B, S, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, S, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, S, H, hd).astype(jnp.float32)
+    wh = w.reshape(B, S, H, hd)
+    u = p["u"].astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                     # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]                 # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+          vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3))
+    state, outs = jax.lax.scan(step, state, xs)
+    y = outs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"].astype(x.dtype), cfg.norm_eps)
+    y = (y * g) @ p["wo"].astype(x.dtype)
+    return y, state, x[:, -1]
+
+
+def rwkv_channel_mix(p, x, x_prev=None):
+    B, S, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    mu = p["cm_mu"].astype(x.dtype)
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xk = x + (xs - x) * mu[0]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"].astype(x.dtype)))
+    return k @ p["cm_v"].astype(x.dtype), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (recurrentgemma): gated linear recurrence + temporal conv
+# ---------------------------------------------------------------------------
+
+def init_rglru(key, cfg: ArchConfig):
+    d, w = cfg.d_model, cfg.rglru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in_x": _dense(ks[0], (d, w)),     # recurrence branch
+        "w_in_g": _dense(ks[1], (d, w)),     # gelu gate branch
+        "w_out": _dense(ks[2], (w, d)),
+        "conv_k": _dense(ks[3], (4, w), scale=0.3),  # causal conv, kernel 4
+        "gate_i": _dense(ks[4], (w,), scale=1.0),    # per-channel input gate
+        "gate_r": _dense(ks[5], (w,), scale=1.0),    # per-channel rec gate
+        "lam": jnp.full((w,), 3.0, jnp.float32),     # a = sigmoid(lam)
+    }
+
+
+def _rglru_scan(p, u, h0):
+    """u: (B,S,w) conv output; h0: (B,w) fp32. Returns (y, hS)."""
+    uf = u.astype(jnp.float32)
+    i_t = jax.nn.sigmoid(uf * p["gate_i"])
+    r_t = jax.nn.sigmoid(uf * p["gate_r"])
+    a = jax.nn.sigmoid(p["lam"])
+    # a_t = a^{c * r_t} with c = 8 (paper's RG-LRU exponent scaling)
+    a_t = jnp.exp(8.0 * r_t * jnp.log(jnp.maximum(a, 1e-6))[None, None, :])
+    gated = i_t * uf
+
+    def step(h, inp):
+        at, xt = inp
+        h = at * h + jnp.sqrt(jnp.maximum(1 - at * at, 1e-8)) * xt
+        return h, h
+
+    hS, ys = jax.lax.scan(step, h0, (a_t.transpose(1, 0, 2),
+                                     gated.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(u.dtype), hS
+
+
+def rglru_seq(p, x, cfg: ArchConfig, h0=None, conv_state=None):
+    """Full recurrent block: in-proj, causal conv4, RG-LRU, gated out-proj."""
+    B, S, d = x.shape
+    w = cfg.rglru_width
+    u = x @ p["w_in_x"].astype(x.dtype)                       # (B,S,w)
+    g = jax.nn.gelu(x @ p["w_in_g"].astype(x.dtype))
+    if conv_state is None:
+        conv_state = jnp.zeros((B, 3, w), x.dtype)
+    upad = jnp.concatenate([conv_state, u], axis=1)           # (B,S+3,w)
+    ck = p["conv_k"].astype(x.dtype)
+    uc = (upad[:, 0:S] * ck[0] + upad[:, 1:S + 1] * ck[1]
+          + upad[:, 2:S + 2] * ck[2] + upad[:, 3:S + 3] * ck[3])
+    if h0 is None:
+        h0 = jnp.zeros((B, w), jnp.float32)
+    y, hS = _rglru_scan(p, uc, h0)
+    out = (y * g) @ p["w_out"].astype(x.dtype)
+    return out, hS, upad[:, -3:]

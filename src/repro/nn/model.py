@@ -1,0 +1,639 @@
+"""Model assembly for all assigned families.
+
+One :class:`Model` facade; family-specific assembly inside.  All stacks use
+``jax.lax.scan`` over stacked per-layer params (one while-loop in HLO keeps
+giant configs compilable), with optional ``jax.checkpoint`` remat per layer.
+
+Public surface used by the launcher / dry-run:
+    m = Model(cfg)
+    params = m.init(key)                      # concrete (smoke tests)
+    loss, metrics = m.loss(params, batch)     # training
+    logits, cache = m.prefill(params, batch)  # serving: prompt ingestion
+    logits, cache = m.decode_step(params, cache, tokens, pos)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import blocks
+from .layers import rms_norm
+from .types import ArchConfig
+
+
+def _unroll(n: int):
+    """Full unroll under REPRO_DRYRUN_UNROLL=1 so XLA cost_analysis counts
+    every layer (a while-loop body is otherwise counted once); 1 in normal
+    runs to keep HLO small and compiles fast."""
+    import os
+    return n if os.environ.get("REPRO_DRYRUN_UNROLL") == "1" else 1
+
+XENT_CHUNK = 512  # positions per cross-entropy chunk (bounds logits memory)
+
+
+def _stack_init(fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+class Model:
+    #: set by the launcher (repro.runtime.step.jit_cell) for distributed runs:
+    #: tuple of mesh axis names the batch dim shards over, or None.
+    batch_axes = None
+    #: mesh axis the decode KV-cache sequence dim shards over, or None.
+    kv_seq_axis = None
+    #: mesh axis the MoE expert dim shards over (EP), or None.
+    ep_axis = None
+    #: mesh axis the residual-stream feature dim shards over (train/prefill),
+    #: or None.  Feature-sharded activations turn the TP matmul partial-sum
+    #: all-reduces into reduce-scatters and eliminate weight regathers
+    #: (S Perf iteration 8).
+    act_model_axis = None
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    def _pin_kv(self, t):
+        """Pin a per-layer KV cache slice (B, S, H, D) to batch x seq
+        sharding (see attention_step docstring)."""
+        if self.kv_seq_axis is None:
+            return t
+        from jax.sharding import PartitionSpec as P
+        spec = P(self.batch_axes, self.kv_seq_axis, None, None)
+        return jax.lax.with_sharding_constraint(t, spec)
+
+    def _pin_rep(self, t):
+        """Pin a decode-step tensor to batch-only sharding (features
+        replicated) — pairs with _pin_kv, see attention_step docstring."""
+        if self.kv_seq_axis is None:
+            return t
+        from jax.sharding import PartitionSpec as P
+        spec = P(self.batch_axes, *([None] * (t.ndim - 1)))
+        return jax.lax.with_sharding_constraint(t, spec)
+
+    def _moe_pins(self):
+        """(pin_expert, pin_token) for moe_apply — see its docstring.
+
+        Inside the expert phase the batch dim gives up the EP axis (the
+        reshard at this boundary is the all-to-all of a classic EP system);
+        outside it the token tensors use the full batch axes."""
+        if self.batch_axes is None and self.ep_axis is None:
+            return None
+        from jax.sharding import PartitionSpec as P
+        eb = self.batch_axes
+        if eb is not None and self.ep_axis is not None:
+            eb = tuple(a for a in eb if a != self.ep_axis) or None
+
+        def pin_e(t):   # (B, E, C, d/f)
+            return jax.lax.with_sharding_constraint(
+                t, P(eb, self.ep_axis, None, None))
+
+        def pin_tok(t):  # (B, S, [K,] d)
+            return jax.lax.with_sharding_constraint(
+                t, P(self.batch_axes, *([None] * (t.ndim - 1))))
+        return (pin_e, pin_tok)
+
+    def _constrain(self, x):
+        """Pin the residual-stream sharding.  Without the batch pin GSPMD
+        replicates (B, S, d) activations per device — measured 16x temp
+        blowup on the 16x16 mesh (EXPERIMENTS.md Dry-run notes).  With
+        act_model_axis the feature dim also shards (S Perf iteration 8)."""
+        if self.batch_axes is None or x.ndim < 2:
+            return x
+        from jax.sharding import PartitionSpec as P
+        mid = [None] * (x.ndim - 2)
+        spec = P(self.batch_axes, *mid, self.act_model_axis)
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key):
+        cfg = self.cfg
+        k_emb, k_layers, k_head, k_extra = jax.random.split(key, 4)
+        params = {
+            "embed": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model),
+                                       jnp.float32) * 0.02,
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "lm_head": jax.random.normal(k_head, (cfg.d_model, cfg.vocab),
+                                         jnp.float32) * 0.02,
+        }
+        if cfg.family in ("dense", "moe", "vlm"):
+            params["layers"] = _stack_init(
+                partial(self._init_decoder_layer), k_layers, cfg.n_layers)
+        elif cfg.family == "ssm":
+            params["layers"] = _stack_init(
+                lambda k: blocks.init_rwkv(k, cfg), k_layers, cfg.n_layers)
+        elif cfg.family == "hybrid":
+            n_units, rem = divmod(cfg.n_layers, 3)
+            params["layers"] = _stack_init(
+                partial(self._init_hybrid_unit), k_layers, n_units)
+            if rem:
+                ks = jax.random.split(k_extra, rem)
+                params["tail"] = [
+                    {"rg": blocks.init_rglru(ks[i], cfg),
+                     "mlp": blocks.init_mlp(jax.random.fold_in(ks[i], 1),
+                                            cfg.d_model, cfg.d_ff),
+                     "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+                     "ln2": jnp.zeros((cfg.d_model,), jnp.float32)}
+                    for i in range(rem)]
+        elif cfg.family == "audio":
+            params["enc_layers"] = _stack_init(
+                partial(self._init_decoder_layer), k_layers, cfg.n_enc_layers)
+            params["layers"] = _stack_init(
+                partial(self._init_cross_layer),
+                jax.random.fold_in(k_layers, 1), cfg.n_layers)
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        else:
+            raise ValueError(cfg.family)
+        if cfg.family == "vlm":
+            params["vision_proj"] = jax.random.normal(
+                k_extra, (1024, cfg.d_model), jnp.float32) * 0.02
+        return params
+
+    def _init_decoder_layer(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        p = {
+            "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+            "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+            "attn": blocks.init_attention(k1, cfg),
+        }
+        if cfg.n_experts:
+            p["moe"] = blocks.init_moe(k2, cfg)
+        else:
+            p["mlp"] = blocks.init_mlp(k2, cfg.d_model, cfg.d_ff)
+        return p
+
+    def _init_cross_layer(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+            "ln_x": jnp.zeros((cfg.d_model,), jnp.float32),
+            "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+            "attn": blocks.init_attention(k1, cfg),
+            "xattn": blocks.init_attention(k2, cfg),
+            "mlp": blocks.init_mlp(k3, cfg.d_model, cfg.d_ff),
+        }
+
+    def _init_hybrid_unit(self, key):
+        """recurrentgemma unit: 2 RG-LRU blocks then 1 local-attention block."""
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        return {
+            "rg1": blocks.init_rglru(ks[0], cfg),
+            "rg2": blocks.init_rglru(ks[1], cfg),
+            "attn": blocks.init_attention(ks[2], cfg),
+            "mlp1": blocks.init_mlp(ks[3], cfg.d_model, cfg.d_ff),
+            "mlp2": blocks.init_mlp(ks[4], cfg.d_model, cfg.d_ff),
+            "mlp3": blocks.init_mlp(ks[5], cfg.d_model, cfg.d_ff),
+            "ln": jnp.zeros((6, cfg.d_model), jnp.float32),
+        }
+
+    # -------------------------------------------------------------- decoder
+    def _decoder_block(self, p, x, *, window: int = 0):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = rms_norm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
+        x = x + blocks.attention_seq(p["attn"], h, cfg, window=window)
+        h = rms_norm(x, p["ln2"].astype(x.dtype), cfg.norm_eps)
+        if cfg.n_experts:
+            y, aux = blocks.moe_apply(p["moe"], h, cfg,
+                                      pins=self._moe_pins())
+        else:
+            y = blocks.mlp_apply(p["mlp"], h)
+        return x + y, aux
+
+    def _ssm_block(self, p, x, state=None, tm_prev=None, cm_prev=None):
+        cfg = self.cfg
+        h = rms_norm(x, jnp.zeros((), x.dtype), cfg.norm_eps)
+        y, state, tm_prev = blocks.rwkv_time_mix_seq(p, h, cfg, state, tm_prev)
+        x = x + y
+        h = rms_norm(x, jnp.zeros((), x.dtype), cfg.norm_eps)
+        y, cm_prev = blocks.rwkv_channel_mix(p, h, cm_prev)
+        return x + y, state, tm_prev, cm_prev
+
+    def _hybrid_unit(self, p, x, caches=None, window=None, collect_kv=False):
+        from .layers import rope
+        cfg = self.cfg
+        window = window or cfg.local_window
+        ln = p["ln"]
+        st = caches or {}
+        y, h1, c1 = blocks.rglru_seq(
+            p["rg1"], rms_norm(x, ln[0].astype(x.dtype), cfg.norm_eps), cfg,
+            st.get("h1"), st.get("c1"))
+        x = x + y
+        x = x + blocks.mlp_apply(
+            p["mlp1"], rms_norm(x, ln[1].astype(x.dtype), cfg.norm_eps))
+        y, h2, c2 = blocks.rglru_seq(
+            p["rg2"], rms_norm(x, ln[2].astype(x.dtype), cfg.norm_eps), cfg,
+            st.get("h2"), st.get("c2"))
+        x = x + y
+        x = x + blocks.mlp_apply(
+            p["mlp2"], rms_norm(x, ln[3].astype(x.dtype), cfg.norm_eps))
+        hn = rms_norm(x, ln[4].astype(x.dtype), cfg.norm_eps)
+        kv = None
+        if collect_kv:
+            _, k, v = blocks._qkv(p["attn"], hn, cfg)
+            S = x.shape[1]
+            kv = (rope(k, jnp.arange(S)[None, :], cfg.rope_theta), v)
+        x = x + blocks.attention_seq(p["attn"], hn, cfg, window=window)
+        x = x + blocks.mlp_apply(
+            p["mlp3"], rms_norm(x, ln[5].astype(x.dtype), cfg.norm_eps))
+        return x, {"h1": h1, "c1": c1, "h2": h2, "c2": c2}, kv
+
+    # ------------------------------------------------------------- forward
+    def _backbone(self, params, x):
+        """Full-sequence backbone (training / prefill trunk). x: (B,S,d)."""
+        cfg = self.cfg
+
+        x = self._constrain(x)
+        if cfg.family in ("dense", "moe", "vlm"):
+            def body(carry, pl):
+                h, aux = carry
+                h2, a = self._decoder_block(pl, self._constrain(h))
+                return (self._constrain(h2), aux + a), None
+            body = jax.checkpoint(body) if cfg.remat else body
+            (x, aux), _ = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), params["layers"],
+                unroll=_unroll(cfg.n_layers))
+        elif cfg.family == "ssm":
+            def body(carry, pl):
+                h2, _, _, _ = self._ssm_block(pl, self._constrain(carry))
+                return self._constrain(h2), None
+            body = jax.checkpoint(body) if cfg.remat else body
+            x, _ = jax.lax.scan(body, x, params["layers"],
+                                unroll=_unroll(cfg.n_layers))
+            aux = jnp.zeros((), jnp.float32)
+        elif cfg.family == "hybrid":
+            def body(carry, pl):
+                h, _, _ = self._hybrid_unit(pl, self._constrain(carry))
+                return self._constrain(h), None
+            body = jax.checkpoint(body) if cfg.remat else body
+            x, _ = jax.lax.scan(body, x, params["layers"],
+                                unroll=_unroll(cfg.n_layers // 3))
+            for tp in params.get("tail", []):
+                y, _, _ = blocks.rglru_seq(
+                    tp["rg"], rms_norm(x, tp["ln1"].astype(x.dtype),
+                                       cfg.norm_eps), cfg)
+                x = x + y
+                x = x + blocks.mlp_apply(
+                    tp["mlp"], rms_norm(x, tp["ln2"].astype(x.dtype),
+                                        cfg.norm_eps))
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            raise ValueError(cfg.family)
+        return rms_norm(x, params["final_norm"].astype(x.dtype),
+                        cfg.norm_eps), aux
+
+    def _encode_audio(self, params, frames):
+        """Whisper encoder over stub frame embeddings (B, F, d)."""
+        cfg = self.cfg
+        x = frames.astype(self.dtype)
+
+        def body(carry, pl):
+            carry = self._constrain(carry)
+            h = rms_norm(carry, pl["ln1"].astype(carry.dtype), cfg.norm_eps)
+            h2 = carry + blocks.attention_seq(pl["attn"], h, cfg, causal=False)
+            h = rms_norm(h2, pl["ln2"].astype(h2.dtype), cfg.norm_eps)
+            return h2 + blocks.mlp_apply(pl["mlp"], h), None
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["enc_layers"],
+                            unroll=_unroll(cfg.n_enc_layers))
+        return rms_norm(x, params["enc_norm"].astype(x.dtype), cfg.norm_eps)
+
+    def _decoder_with_cross(self, params, x, enc_out):
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        B, F, _ = enc_out.shape
+
+        def body(carry, pl):
+            h = self._constrain(carry)
+            hn = rms_norm(h, pl["ln1"].astype(h.dtype), cfg.norm_eps)
+            h = h + blocks.attention_seq(pl["attn"], hn, cfg)
+            hn = rms_norm(h, pl["ln_x"].astype(h.dtype), cfg.norm_eps)
+            ck, cv = blocks.kv_proj(pl["xattn"], enc_out, cfg)
+            h = h + blocks.attention_seq(pl["xattn"], hn, cfg, causal=False,
+                                         kv_override=(ck, cv))
+            hn = rms_norm(h, pl["ln2"].astype(h.dtype), cfg.norm_eps)
+            return h + blocks.mlp_apply(pl["mlp"], hn), None
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["layers"],
+                            unroll=_unroll(cfg.n_layers))
+        return rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+
+    def _embed_inputs(self, params, batch):
+        """Family-dependent input embedding. Returns (x, labels, loss_mask)."""
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            patches = batch["patch_embeds"].astype(self.dtype)
+            vis = patches @ params["vision_proj"].astype(self.dtype)
+            tok = params["embed"].astype(self.dtype)[batch["tokens"]]
+            x = jnp.concatenate([vis, tok], axis=1)
+            if "labels" not in batch:          # prefill: no loss targets
+                return x, None, None
+            labels = jnp.concatenate(
+                [jnp.zeros(vis.shape[:2], batch["labels"].dtype),
+                 batch["labels"]], axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros(vis.shape[:2], jnp.float32),
+                 jnp.ones(batch["labels"].shape, jnp.float32)], axis=1)
+            return x, labels, mask
+        tok = params["embed"].astype(self.dtype)[batch["tokens"]]
+        if "labels" not in batch:
+            return tok, None, None
+        labels = batch["labels"]
+        return tok, labels, jnp.ones(labels.shape, jnp.float32)
+
+    def _xent(self, params, x, labels, mask):
+        """Chunked softmax cross-entropy (bounds the (B,S,V) logits)."""
+        cfg = self.cfg
+        B, S, d = x.shape
+        chunk = min(XENT_CHUNK, S)
+        n = -(-S // chunk)
+        pad = n * chunk - S
+        xs = jnp.pad(x, ((0, 0), (0, pad), (0, 0))).reshape(B, n, chunk, d)
+        ls = jnp.pad(labels, ((0, 0), (0, pad))).reshape(B, n, chunk)
+        ms = jnp.pad(mask, ((0, 0), (0, pad))).reshape(B, n, chunk)
+        head = params["lm_head"].astype(self.dtype)
+
+        def chunk_loss(carry, inp):
+            xc, lc, mc = inp                       # (B, chunk, ...)
+            logits = (xc @ head).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lc[..., None],
+                                       axis=-1).squeeze(-1)
+            nll = (lse - gold) * mc
+            return (carry[0] + nll.sum(), carry[1] + mc.sum()), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            chunk_loss, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (xs.transpose(1, 0, 2, 3), ls.transpose(1, 0, 2),
+             ms.transpose(1, 0, 2)), unroll=_unroll(n))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    # ------------------------------------------------------------- training
+    def loss(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            enc = self._encode_audio(params, batch["frames"])
+            x = params["embed"].astype(self.dtype)[batch["tokens"]]
+            x = self._decoder_with_cross(params, x, enc)
+            l = self._xent(params, x, batch["labels"],
+                           jnp.ones(batch["labels"].shape, jnp.float32))
+            return l, {"xent": l}
+        x, labels, mask = self._embed_inputs(params, batch)
+        x, aux = self._backbone(params, x)
+        l = self._xent(params, x, labels, mask)
+        total = l + 0.01 * aux
+        return total, {"xent": l, "aux": aux}
+
+    # -------------------------------------------------------------- serving
+    def init_cache(self, batch: int, context: int, *, zeros=jnp.zeros):
+        """Concrete (or ShapeDtypeStruct via zeros=override) decode cache."""
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        L = cfg.n_layers
+        dt = self.dtype
+
+        def kv(C, n_layers):
+            return {"k": zeros((n_layers, batch, C, cfg.n_kv_heads, hd), dt),
+                    "v": zeros((n_layers, batch, C, cfg.n_kv_heads, hd), dt)}
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            return kv(context, L)
+        if cfg.family == "ssm":
+            H = cfg.d_model // cfg.rwkv_head_dim
+            return {
+                "state": zeros((L, batch, H, cfg.rwkv_head_dim,
+                                cfg.rwkv_head_dim), jnp.float32),
+                "tm_prev": zeros((L, batch, cfg.d_model), dt),
+                "cm_prev": zeros((L, batch, cfg.d_model), dt),
+            }
+        if cfg.family == "hybrid":
+            n_units, rem = divmod(cfg.n_layers, 3)
+            W = min(context, cfg.local_window)
+            c = {
+                "h1": zeros((n_units, batch, cfg.rglru_width), jnp.float32),
+                "c1": zeros((n_units, batch, 3, cfg.rglru_width), dt),
+                "h2": zeros((n_units, batch, cfg.rglru_width), jnp.float32),
+                "c2": zeros((n_units, batch, 3, cfg.rglru_width), dt),
+                **kv(W, n_units),
+            }
+            if rem:
+                c["tail_h"] = zeros((rem, batch, cfg.rglru_width), jnp.float32)
+                c["tail_c"] = zeros((rem, batch, 3, cfg.rglru_width), dt)
+            return c
+        if cfg.family == "audio":
+            c = kv(context, L)
+            c["cross_k"] = zeros((L, batch, cfg.n_frames, cfg.n_kv_heads, hd), dt)
+            c["cross_v"] = zeros((L, batch, cfg.n_frames, cfg.n_kv_heads, hd), dt)
+            return c
+        raise ValueError(cfg.family)
+
+    def prefill(self, params, batch):
+        """Ingest a prompt; return (last-position logits, filled cache)."""
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        if cfg.family in ("dense", "moe", "vlm"):
+            x, _, _ = self._embed_inputs(params, batch)
+            B, S, _ = x.shape
+            caches = []
+
+            def body(carry, pl):
+                h, _ = self._decoder_block(pl, carry)
+                # recompute K/V for the cache (cheap vs attention itself)
+                hn = rms_norm(carry, pl["ln1"].astype(carry.dtype),
+                              cfg.norm_eps)
+                _, k, v = blocks._qkv(pl["attn"], hn, cfg)
+                from .layers import rope
+                k = rope(k, jnp.arange(S)[None, :], cfg.rope_theta)
+                return h, {"k": k, "v": v}
+
+            x, kvs = jax.lax.scan(body, x, params["layers"], unroll=_unroll(cfg.n_layers))
+            x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+            logits = (x[:, -1:] @ params["lm_head"].astype(x.dtype))
+            return logits.astype(jnp.float32), kvs
+        if cfg.family == "ssm":
+            x = params["embed"].astype(self.dtype)[batch["tokens"]]
+
+            def body(carry, pl):
+                h = carry
+                h2, state, tm, cm = self._ssm_block(pl, h)
+                return h2, {"state": state, "tm_prev": tm, "cm_prev": cm}
+            x, caches = jax.lax.scan(body, x, params["layers"], unroll=_unroll(cfg.n_layers))
+            x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+            logits = x[:, -1:] @ params["lm_head"].astype(x.dtype)
+            return logits.astype(jnp.float32), caches
+        if cfg.family == "audio":
+            from .layers import rope
+            enc = self._encode_audio(params, batch["frames"])
+            x = params["embed"].astype(self.dtype)[batch["tokens"]]
+            B, S, _ = x.shape
+
+            def body(carry, pl):
+                h = carry
+                hn = rms_norm(h, pl["ln1"].astype(h.dtype), cfg.norm_eps)
+                _, k, v = blocks._qkv(pl["attn"], hn, cfg)
+                k = rope(k, jnp.arange(S)[None, :], cfg.rope_theta)
+                h = h + blocks.attention_seq(pl["attn"], hn, cfg)
+                hn = rms_norm(h, pl["ln_x"].astype(h.dtype), cfg.norm_eps)
+                ck, cv = blocks.kv_proj(pl["xattn"], enc, cfg)
+                h = h + blocks.attention_seq(pl["xattn"], hn, cfg, causal=False,
+                                             kv_override=(ck, cv))
+                hn = rms_norm(h, pl["ln2"].astype(h.dtype), cfg.norm_eps)
+                return h + blocks.mlp_apply(pl["mlp"], hn), \
+                    {"k": k, "v": v, "cross_k": ck, "cross_v": cv}
+
+            x, cache = jax.lax.scan(body, x, params["layers"], unroll=_unroll(cfg.n_layers))
+            x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+            logits = x[:, -1:] @ params["lm_head"].astype(x.dtype)
+            return logits.astype(jnp.float32), cache
+        if cfg.family == "hybrid":
+            from .layers import rope
+            x = params["embed"].astype(self.dtype)[batch["tokens"]]
+            B, S, _ = x.shape
+            W = min(S, cfg.local_window)
+            # ring-buffer slot of position p is p % W; the last W positions
+            # fill every slot exactly once
+            slots = jnp.arange(W)
+            ring_pos = S - 1 - ((S - 1 - slots) % W)        # (W,)
+
+            def body(carry, pl):
+                h = carry
+                h2, st, (k, v) = self._hybrid_unit(pl, h, collect_kv=True)
+                kv = {"k": jnp.zeros((B, W, cfg.n_kv_heads, hd), k.dtype)
+                      .at[:, ring_pos % W].set(k[:, ring_pos]),
+                      "v": jnp.zeros((B, W, cfg.n_kv_heads, hd), v.dtype)
+                      .at[:, ring_pos % W].set(v[:, ring_pos])}
+                return h2, {**st, **kv}
+
+            x, cache = jax.lax.scan(body, x, params["layers"], unroll=_unroll(cfg.n_layers))
+            tails_h, tails_c = [], []
+            for tp in params.get("tail", []):
+                y, th, tc = blocks.rglru_seq(
+                    tp["rg"], rms_norm(x, tp["ln1"].astype(x.dtype),
+                                       cfg.norm_eps), cfg)
+                x = x + y
+                x = x + blocks.mlp_apply(
+                    tp["mlp"], rms_norm(x, tp["ln2"].astype(x.dtype),
+                                        cfg.norm_eps))
+                tails_h.append(th)
+                tails_c.append(tc)
+            if tails_h:
+                cache["tail_h"] = jnp.stack(tails_h)
+                cache["tail_c"] = jnp.stack(tails_c)
+            x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+            logits = x[:, -1:] @ params["lm_head"].astype(x.dtype)
+            return logits.astype(jnp.float32), cache
+        raise NotImplementedError(cfg.family)
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One token for the whole batch. tokens: (B, 1); pos: scalar int32."""
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        x = params["embed"].astype(self.dtype)[tokens]         # (B,1,d)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def body(carry, inp):
+                h = carry
+                pl, kv = inp
+                hn = rms_norm(h, pl["ln1"].astype(h.dtype), cfg.norm_eps)
+                a, kv2 = blocks.attention_step(pl["attn"], hn, kv, pos, cfg,
+                                               pin=self._pin_kv, pin_q=self._pin_rep)
+                h = h + a
+                hn = rms_norm(h, pl["ln2"].astype(h.dtype), cfg.norm_eps)
+                if cfg.n_experts:
+                    y, _ = blocks.moe_apply(pl["moe"], hn, cfg,
+                                            pins=self._moe_pins())
+                else:
+                    y = blocks.mlp_apply(pl["mlp"], hn)
+                return h + y, kv2
+            x, kvs = jax.lax.scan(
+                body, x, (params["layers"], {"k": cache["k"], "v": cache["v"]}),
+                unroll=_unroll(cfg.n_layers))
+            new_cache = kvs
+        elif cfg.family == "ssm":
+            def body(carry, inp):
+                h = carry
+                pl, st = inp
+                hn = rms_norm(h, jnp.zeros((), h.dtype), cfg.norm_eps)
+                y, state, tm = blocks.rwkv_time_mix_seq(
+                    pl, hn, cfg, st["state"], st["tm_prev"])
+                h = h + y
+                hn = rms_norm(h, jnp.zeros((), h.dtype), cfg.norm_eps)
+                y, cm = blocks.rwkv_channel_mix(pl, hn, st["cm_prev"])
+                return h + y, {"state": state, "tm_prev": tm, "cm_prev": cm}
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache), unroll=_unroll(cfg.n_layers))
+        elif cfg.family == "hybrid":
+            def body(carry, inp):
+                h = carry
+                pl, st = inp
+                ln = pl["ln"]
+                y, h1, c1 = blocks.rglru_seq(
+                    pl["rg1"], rms_norm(h, ln[0].astype(h.dtype), cfg.norm_eps),
+                    cfg, st["h1"], st["c1"])
+                h = h + y
+                h = h + blocks.mlp_apply(
+                    pl["mlp1"], rms_norm(h, ln[1].astype(h.dtype), cfg.norm_eps))
+                y, h2, c2 = blocks.rglru_seq(
+                    pl["rg2"], rms_norm(h, ln[2].astype(h.dtype), cfg.norm_eps),
+                    cfg, st["h2"], st["c2"])
+                h = h + y
+                h = h + blocks.mlp_apply(
+                    pl["mlp2"], rms_norm(h, ln[3].astype(h.dtype), cfg.norm_eps))
+                a, kv2 = blocks.attention_step(
+                    pl["attn"], rms_norm(h, ln[4].astype(h.dtype), cfg.norm_eps),
+                    {"k": st["k"], "v": st["v"]}, pos, cfg,
+                    window=cfg.local_window, pin=self._pin_kv, pin_q=self._pin_rep)
+                h = h + a
+                h = h + blocks.mlp_apply(
+                    pl["mlp3"], rms_norm(h, ln[5].astype(h.dtype), cfg.norm_eps))
+                return h, {"h1": h1, "c1": c1, "h2": h2, "c2": c2, **kv2}
+            unit_cache = {k: cache[k] for k in ("h1", "c1", "h2", "c2", "k", "v")}
+            x, new_unit = jax.lax.scan(body, x, (params["layers"], unit_cache), unroll=_unroll(cfg.n_layers // 3))
+            new_cache = dict(new_unit)
+            if "tail_h" in cache:
+                ths, tcs = [], []
+                for i, tp in enumerate(params.get("tail", [])):
+                    y, th, tc = blocks.rglru_seq(
+                        tp["rg"], rms_norm(x, tp["ln1"].astype(x.dtype),
+                                           cfg.norm_eps), cfg,
+                        cache["tail_h"][i], cache["tail_c"][i])
+                    x = x + y
+                    x = x + blocks.mlp_apply(
+                        tp["mlp"], rms_norm(x, tp["ln2"].astype(x.dtype),
+                                            cfg.norm_eps))
+                    ths.append(th)
+                    tcs.append(tc)
+                new_cache["tail_h"] = jnp.stack(ths)
+                new_cache["tail_c"] = jnp.stack(tcs)
+        elif cfg.family == "audio":
+            def body(carry, inp):
+                h = carry
+                pl, st = inp
+                hn = rms_norm(h, pl["ln1"].astype(h.dtype), cfg.norm_eps)
+                a, kv2 = blocks.attention_step(
+                    pl["attn"], hn, {"k": st["k"], "v": st["v"]}, pos, cfg,
+                    pin=self._pin_kv, pin_q=self._pin_rep)
+                h = h + a
+                hn = rms_norm(h, pl["ln_x"].astype(h.dtype), cfg.norm_eps)
+                B = hn.shape[0]
+                q, _, _ = blocks._qkv(pl["xattn"], hn, cfg)
+                from .layers import decode_attention
+                xa = decode_attention(q, st["cross_k"], st["cross_v"],
+                                      st["cross_k"].shape[1])
+                h = h + xa.reshape(B, 1, -1) @ pl["xattn"]["wo"].astype(h.dtype)
+                hn = rms_norm(h, pl["ln2"].astype(h.dtype), cfg.norm_eps)
+                return h + blocks.mlp_apply(pl["mlp"], hn), {**kv2,
+                    "cross_k": st["cross_k"], "cross_v": st["cross_v"]}
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache), unroll=_unroll(cfg.n_layers))
+        else:
+            raise ValueError(cfg.family)
+
+        x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+        logits = x @ params["lm_head"].astype(x.dtype)
+        return logits.astype(jnp.float32), new_cache

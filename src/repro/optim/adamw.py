@@ -1,0 +1,112 @@
+"""AdamW + SGD-momentum optimizers (pure pytree functions).
+
+Optimizer-state dtype is configurable per architecture: the largest assigned
+model (arctic-480b) keeps Adam moments in bf16 because fp32 moments alone
+would exceed single-pod HBM (DESIGN.md 4) — the paper's theme (narrower state
+where accuracy allows) applied to the optimizer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "Sgd", "clip_by_global_norm", "global_norm",
+           "cosine_schedule"]
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"
+    schedule: object = None     # optional step -> lr
+
+    def init(self, params):
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(self, params, state, grads):
+        count = state["count"] + 1
+        lr = self.schedule(count) if self.schedule else self.lr
+        b1, b2 = self.b1, self.b2
+        dt = jnp.dtype(self.state_dtype)
+
+        def upd(p, m, v, g):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+            mhat = m32 / (1 - b1 ** count.astype(jnp.float32))
+            vhat = v32 / (1 - b2 ** count.astype(jnp.float32))
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:   # decoupled weight decay on matrices only
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            p32 = p.astype(jnp.float32) - lr * step
+            return p32.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_g = tdef.flatten_up_to(grads)
+        out = [upd(p, m, v, g) for p, m, v, g
+               in zip(flat_p, flat_m, flat_v, flat_g)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+@dataclass(frozen=True)
+class Sgd:
+    lr: float = 1e-2
+    momentum: float = 0.9
+
+    def init(self, params):
+        return {"mom": jax.tree.map(jnp.zeros_like, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def apply(self, params, state, grads):
+        def upd(p, mo, g):
+            mo2 = mo * self.momentum + g.astype(mo.dtype)
+            return (p.astype(jnp.float32)
+                    - self.lr * mo2.astype(jnp.float32)).astype(p.dtype), mo2
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_m = tdef.flatten_up_to(state["mom"])
+        flat_g = tdef.flatten_up_to(grads)
+        out = [upd(p, m, g) for p, m, g in zip(flat_p, flat_m, flat_g)]
+        return (tdef.unflatten([o[0] for o in out]),
+                {"mom": tdef.unflatten([o[1] for o in out]),
+                 "count": state["count"] + 1})

@@ -1,0 +1,2 @@
+from .ptq import (dequant, min_bitwidth_search, quant_bytes, quantize_tree,  # noqa: F401
+                  sls_rescale)

@@ -1,0 +1,166 @@
+"""Post-training quantization for the LM zoo — the paper's pipeline at scale.
+
+Three stages mirroring Sections IV-A / IV-C / V of the paper (DESIGN.md 2):
+
+1. ``quantize_params``  — per-channel power-of-two-scale int8 (or int4)
+   quantization of the matmul weights (the paper's 2^q conversion,
+   generalized per channel).  Norm scales, biases, routers, and recurrence
+   gates stay float (accuracy-critical, byte-negligible).
+2. ``min_bitwidth_search`` — the paper's minimum-quantization-value loop with
+   the LM metric: lower bits while the quality loss (xent delta on a
+   validation batch) stays under budget.
+3. ``sls_rescale``      — the paper's smallest-left-shift tuning, PoT form:
+   per channel group, try RAISING the shared exponent (coarser grid) while
+   the metric budget holds — narrower effective mantissas, fewer HBM bytes.
+
+Serving integration: ``QuantizedLinear`` pytrees slot into model params;
+``dequant`` reconstructs bf16 on the fly (exact: PoT scale), and on TPU the
+matmul itself can run through the Pallas qmatmul kernel (repro.kernels).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import quantize_pot
+
+__all__ = ["quantize_tree", "dequant", "min_bitwidth_search", "sls_rescale",
+           "quant_bytes", "pack_int4", "unpack_int4"]
+
+_SKIP_SUBSTR = ("ln", "norm", "router", "gate_i", "gate_r", "lam", "mu",
+                "u", "w0", "bias", "bq", "bk", "bv")
+
+
+def _should_quantize(path_key: str, leaf) -> bool:
+    if leaf.ndim < 2:
+        return False
+    name = path_key.split("/")[-1]
+    return not any(s in name for s in _SKIP_SUBSTR)
+
+
+def pack_int4(q_i8):
+    """Pack int4 values (stored in int8) two-per-byte along the last dim.
+
+    Real HBM halving for the 4-bit rung of the ladder (the paper's minimum-
+    bitwidth idea taken to its serving conclusion)."""
+    assert q_i8.shape[-1] % 2 == 0
+    lo = q_i8[..., 0::2] & 0x0F
+    hi = (q_i8[..., 1::2] & 0x0F) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(packed):
+    """Inverse of pack_int4 (sign-extends each nibble)."""
+    lo = (packed << 4).astype(jnp.int8) >> 4          # arithmetic sign-extend
+    hi = packed >> 4
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def quantize_tree(params, *, bits: int = 8):
+    """Replace big matmul weights by {"q": int8, "exp": int32} dicts.
+    At bits <= 4 the int4 mantissas are nibble-packed (pack_int4)."""
+    def q(path, leaf):
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        if not _should_quantize(key, leaf):
+            return leaf
+        axis = tuple(range(leaf.ndim - 1))     # per-output-channel
+        wq, e = quantize_pot(leaf.astype(jnp.float32), bits=bits,
+                             axis=axis)
+        if bits <= 4 and leaf.shape[-1] % 2 == 0:
+            return {"q": pack_int4(wq), "exp": e, "bits": bits,
+                    "packed": True}
+        return {"q": wq, "exp": e, "bits": bits}
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+def _is_qleaf(x):
+    return isinstance(x, dict) and set(x) >= {"q", "exp"}
+
+
+def dequant(qtree, dtype=jnp.bfloat16):
+    """Reconstruct a float param tree (exact PoT dequant)."""
+    def d(leaf):
+        if _is_qleaf(leaf):
+            q = leaf["q"]
+            if leaf.get("packed"):
+                q = unpack_int4(q)
+            return (q.astype(jnp.float32)
+                    * jnp.exp2(-leaf["exp"].astype(jnp.float32))
+                    ).astype(dtype)
+        return leaf
+    return jax.tree.map(d, qtree, is_leaf=_is_qleaf)
+
+
+def quant_bytes(tree) -> int:
+    """Serving bytes of a (possibly quantized) tree."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            tree, is_leaf=_is_qleaf):
+        if _is_qleaf(leaf):
+            total += leaf["q"].size * (1 if leaf.get("bits", 8) > 4 else 1)
+            total += leaf["exp"].size * 4
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def min_bitwidth_search(params, eval_fn, *, budget: float = 0.01,
+                        bit_ladder=(8, 6, 5, 4)) -> tuple:
+    """Paper IV-A at LM scale: walk down the bit ladder while quality holds.
+
+    eval_fn(params_float_like) -> scalar loss (lower better). Returns
+    (quantized_tree, chosen_bits, history). Budget is a relative loss
+    increase vs the float baseline (default 1%)."""
+    base = float(eval_fn(params))
+    history = [("float", base)]
+    chosen = None
+    bits_used = None
+    for bits in bit_ladder:
+        qt = quantize_tree(params, bits=bits)
+        loss = float(eval_fn(dequant(qt)))
+        history.append((bits, loss))
+        if loss <= base * (1.0 + budget):
+            chosen, bits_used = qt, bits
+        else:
+            break
+    if chosen is None:                    # even 8 bits broke the budget
+        chosen, bits_used = quantize_tree(params, bits=bit_ladder[0]), \
+            bit_ladder[0]
+    return chosen, bits_used, history
+
+
+def sls_rescale(qtree, eval_fn, *, budget: float = 0.01, max_raise: int = 2):
+    """Paper IV-C analogue: raise shared PoT exponents (coarser grids) while
+    the metric budget holds.  Raising exp by k zeroes the k LSBs of every
+    int8 mantissa in that channel — exactly the paper's 'multiple of 2^k'
+    datapath narrowing."""
+    base = float(eval_fn(dequant(qtree)))
+    raised = 0
+
+    def leaves(tree):
+        return [l for l in jax.tree_util.tree_leaves(tree, is_leaf=_is_qleaf)
+                if _is_qleaf(l)]
+
+    flat, treedef = jax.tree_util.tree_flatten(qtree, is_leaf=_is_qleaf)
+    for i, leaf in enumerate(flat):
+        if not _is_qleaf(leaf):
+            continue
+        for k in range(1, max_raise + 1):
+            cand = dict(leaf)
+            # shift mantissas right, exponent down: values become multiples
+            # of 2^k on the original grid
+            mant = unpack_int4(leaf["q"]) if leaf.get("packed") else leaf["q"]
+            mant = ((mant.astype(jnp.int32) >> k) << k).astype(jnp.int8)
+            cand["q"] = pack_int4(mant) if leaf.get("packed") else mant
+            trial = jax.tree_util.tree_unflatten(
+                treedef, flat[:i] + [cand] + flat[i + 1:])
+            if float(eval_fn(dequant(trial))) <= base * (1.0 + budget):
+                flat[i] = cand
+                raised += 1
+            else:
+                break
+    return jax.tree_util.tree_unflatten(treedef, flat), raised

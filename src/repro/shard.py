@@ -1,0 +1,223 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs by path.
+
+Baseline policy (perf pass iterates on this, EXPERIMENTS.md Perf):
+
+* 2-D weights  (a, b): input dim sharded over "data" (ZeRO-3/FSDP style),
+  output dim over "model" (TP).  GSPMD inserts the weight all-gathers.
+* embeddings   (V, d): vocab over "model", d over "data".
+* expert 3-D   (E, .., ..): experts over "model" (EP) + one inner dim over
+  "data" — required to fit arctic-480b (DESIGN.md 4).
+* batch dims over ("pod", "data") when divisible; replicated otherwise
+  (long_500k has batch 1: model/feature parallelism only).
+* KV caches: head-dim over "model" (works for every kv_heads value incl. 1),
+  batch over ("pod","data") when divisible.
+* norm scales / small vectors: replicated.
+
+Every rule degrades to replication when a dim is not divisible by the mesh
+axis — never an invalid sharding.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "named",
+           "batch_axes", "logits_spec"]
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, dim: int, axis):
+    """axis if dim divides evenly on it, else None (replicate)."""
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def batch_axes(mesh: Mesh, global_batch: int | None = None):
+    """Mesh axes the batch dim shards over.
+
+    With FSDP weights (S Perf iteration 9) every mesh axis is a data axis, so
+    the batch should spread over as many axes as divide it: largest divisible
+    prefix of ("pod", "data", "model").  Decode cells (batch 128 on 256
+    chips) naturally fall back to ("pod","data"), which leaves "model" free
+    for the sequence-sharded KV cache.
+    """
+    ordered = [a for a in ("pod", "data", "model") if a in mesh.axis_names]
+    if global_batch is None:
+        return tuple(ordered[:-1]) if len(ordered) > 1 else tuple(ordered)
+    best = None
+    for i in range(1, len(ordered) + 1):
+        axes = tuple(ordered[:i])
+        if global_batch % _axis_size(mesh, axes) == 0:
+            best = axes
+    return best or tuple(ordered[:1])
+
+
+def _fsdp_2d(mesh: Mesh, shape: tuple) -> P:
+    """Fully-sharded weight: the largest dim over the merged ("data","model")
+    axes if it divides, else over "data" alone (16-way), else the other dim.
+
+    S Perf iteration 9: tensor parallelism pays a (B_loc, S, d) all-reduce
+    per matmul in fwd AND bwd — for d <= ~8k at batch 256 that dwarfs FSDP's
+    per-layer weight all-gather (which is independent of batch).  Train and
+    prefill therefore use pure FSDP; decode keeps TP (weights must stay
+    resident — re-gathering all weights per emitted token would swamp ICI).
+    """
+    spec = [None] * len(shape)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for axes in (("data", "model"), ("data",), ("model",)):
+        for i in order:
+            if shape[i] > 1 and shape[i] % _axis_size(mesh, axes) == 0:
+                spec[i] = axes if len(axes) > 1 else axes[0]
+                return P(*spec)
+    return P(*spec)
+
+
+def _leaf_spec(mesh: Mesh, path: tuple, shape: tuple, mode: str,
+               ep: bool = False) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    last = names[-1] if names else ""
+    joined = "/".join(str(n) for n in names)
+
+    if len(shape) == 0 or max(shape, default=0) <= 1024 and len(shape) <= 1:
+        return P()
+    # embeddings / unembedding: vocab over model (keeps xent logits sharded)
+    if last == "embed":
+        return P(_fit(mesh, shape[0], "model"), _fit(mesh, shape[1], "data"))
+    if last == "lm_head":
+        return P(_fit(mesh, shape[0], "data"), _fit(mesh, shape[1], "model"))
+    if last == "vision_proj":
+        return P(_fit(mesh, shape[0], "data"), _fit(mesh, shape[1], "model"))
+    # MoE experts: stacked (L, E, a, b) or unstacked (E, a, b).
+    # EP over "model" when E divides (arctic); otherwise FSDP like dense
+    # (S Perf iteration 9: the old "TP over f" fallback cost 21 GB/layer of
+    # collectives on qwen2-moe).
+    if (last in ("wgu", "wg", "wu", "wd") and "moe" in joined
+            and "shared" not in joined and "dense" not in joined
+            and len(shape) >= 3):
+        if shape[-3] % _axis_size(mesh, "model") == 0:
+            spec = [None] * len(shape)
+            spec[-3] = "model"                          # experts (EP)
+            spec[-2] = _fit(mesh, shape[-2], "data")
+            return P(*spec)
+        if mode == "train":
+            return _fsdp_2d(mesh, shape)
+        # decode/prefill with a non-divisible expert count: TP over the
+        # expert FFN width — FSDP here would re-gather every expert weight
+        # per emitted token (measured 8x regression on qwen2-moe decode)
+        spec = [None] * len(shape)
+        spec[-1] = _fit(mesh, shape[-1], "model")
+        spec[-2] = _fit(mesh, shape[-2], "data")
+        return P(*spec)
+    # generic linear weights
+    if len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1:
+        if mode == "train" and not ep:
+            return _fsdp_2d(mesh, shape)
+        # prefill: batch (32) cannot cover both axes, so FSDP would leave the
+        # model axis idle (16x duplicated compute — S Perf iteration 13);
+        # prefill and decode therefore use TP over "model".
+        # EP archs (arctic): batch shards over "data" only (the EP axis
+        # carries experts), so non-expert weights keep TP over "model" to
+        # parallelize attention across it (S Perf iterations 10-11: both
+        # FSDP-everything and an EP reshard boundary regressed badly).
+        # decode/prefill: TP — resident weights.  decode keeps projection
+        # outputs feature-replicated (iteration 6); prefill (forward-only,
+        # activation-heavy) does better with the 2D layout where GSPMD can
+        # chain reduce-scatters (measured: llava prefill coll 13.6 s with
+        # out=None vs 10.3 s with out="data"; S Perf iteration 13).
+        spec = [None] * len(shape)
+        out_axis = _fit(mesh, shape[-1], "model")
+        in_axis = _fit(mesh, shape[-2], "data")
+        if last in ("wo", "wd", "cm_v", "w_out"):
+            in_axis = _fit(mesh, shape[-2], "model")
+            # prefill: out over "data" lets GSPMD chain reduce-scatters
+            # (iteration 13); decode: feature-replicated output avoids a
+            # per-token reshard against the batch-sharded residual (iter 6)
+            out_axis = _fit(mesh, shape[-1], "data") if mode == "prefill" \
+                else None
+        spec[-1], spec[-2] = out_axis, in_axis
+        return P(*spec)
+    # stacked 1-D vectors (L, b): biases sharded over model when large
+    if len(shape) >= 1 and shape[-1] >= 4096:
+        spec = [None] * len(shape)
+        spec[-1] = _fit(mesh, shape[-1], "model")
+        return P(*spec)
+    return P()
+
+
+def param_specs(mesh: Mesh, params_shape_tree, mode: str = "train",
+                ep: bool = False):
+    """PartitionSpec pytree for params (or mirrored optimizer moments).
+
+    mode: "train" -> FSDP weights; "prefill"/"decode" -> TP weights.
+    ep: arch uses expert parallelism over "model" (changes the dense rule;
+    see _leaf_spec)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(mesh, path, leaf.shape, mode, ep),
+        params_shape_tree)
+
+
+def opt_specs(mesh: Mesh, params_shape_tree, ep: bool = False):
+    pspecs = param_specs(mesh, params_shape_tree, mode="train", ep=ep)
+    return {"m": pspecs, "v": pspecs, "count": P()}
+
+
+def sgd_specs(mesh: Mesh, params_shape_tree):
+    return {"mom": param_specs(mesh, params_shape_tree), "count": P()}
+
+
+def batch_specs(mesh: Mesh, batch_shape_tree):
+    """Batch pytree: leading dim over the widest divisible axis set."""
+
+    def spec(leaf):
+        if len(leaf.shape) == 0:
+            return P()
+        ba = batch_axes(mesh, leaf.shape[0])
+        lead = _fit(mesh, leaf.shape[0], ba)
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+    return jax.tree.map(spec, batch_shape_tree)
+
+
+# Perf iterations 1-2 (EXPERIMENTS.md S Perf).  Baseline sharded the KV
+# head-dim over "model"; that fights head-sharded attention compute and GSPMD
+# re-gathers the whole cache every layer ("involuntary full rematerialization"
+# warnings; collective term 0.40s on qwen2.5-3b decode_32k).  Batch-only
+# sharding fixed the collectives (0.21s) but replicated the cache over the
+# model axis (9.7 GB/chip arguments).  Final rule: shard the SEQUENCE dim of
+# 5-D KV caches over "model" — attention reads are local, softmax needs only
+# (B,H,1)-sized stat reductions, the single-position cache write touches one
+# shard, and the cache occupies cache/256 per chip.
+CACHE_SEQ_DIM = True
+
+
+def cache_specs(mesh: Mesh, cache_shape_tree):
+    """Decode caches: (L, B, S, H, D) KV -> batch over data, seq over model;
+    recurrent states (any other rank) -> batch over data only."""
+    ba = batch_axes(mesh)
+
+    def spec(leaf):
+        shape = leaf.shape
+        if len(shape) <= 1:
+            return P()
+        s = [None] * len(shape)
+        s[1] = _fit(mesh, shape[1], ba)            # batch dim (after layers)
+        if CACHE_SEQ_DIM and len(shape) == 5 and shape[2] > 1024:
+            s[2] = _fit(mesh, shape[2], "model")   # KV sequence dim
+        return P(*s)
+    return jax.tree.map(spec, cache_shape_tree)
+
+
+def logits_spec(mesh: Mesh):
+    return P(batch_axes(mesh), None, "model")
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

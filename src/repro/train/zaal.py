@@ -1,0 +1,182 @@
+"""ZAAL — the paper's training algorithm (Section VI), re-implemented in JAX.
+
+Feedforward MLP trainer with the feature set the paper lists: conventional
+and stochastic gradient descent plus Adam; Xavier / He / fully-random
+initialization; early stopping on a validation set, iteration-count and
+loss-saturation stopping; activation functions sigmoid, hsig, tanh, htanh,
+lin, relu, satlin, softmax.
+
+Training runs in float (as the paper does, offline); the hardware pipeline
+(repro.core) quantizes and tunes the result.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TrainConfig", "train", "mlp_apply", "init_params", "ACTIVATIONS"]
+
+ACTIVATIONS = {
+    "sigmoid": jax.nn.sigmoid,
+    "hsig": lambda y: jnp.clip(y / 2 + 0.5, 0.0, 1.0),
+    "tanh": jnp.tanh,
+    "htanh": lambda y: jnp.clip(y, -1.0, 1.0),
+    "lin": lambda y: y,
+    "relu": jax.nn.relu,
+    "satlin": lambda y: jnp.clip(y, 0.0, 1.0),
+    "softmax": lambda y: jax.nn.softmax(y, axis=-1),
+}
+
+
+@dataclass
+class TrainConfig:
+    structure: tuple            # e.g. (16, 16, 10): inputs, hidden..., outputs
+    activations: tuple = None   # per layer; default htanh hidden + sigmoid out
+    init: str = "xavier"        # xavier | he | random
+    optimizer: str = "adam"     # adam | sgd | gd
+    lr: float = 3e-3
+    batch_size: int = 256       # ignored for optimizer='gd' (full batch)
+    epochs: int = 150
+    early_stop_patience: int = 20
+    loss_saturation_eps: float = 1e-6
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.activations is None:
+            n_hidden = len(self.structure) - 2
+            self.activations = tuple(["htanh"] * n_hidden + ["sigmoid"])
+
+
+def init_params(cfg: TrainConfig, key):
+    params = []
+    dims = list(cfg.structure)
+    for i, (n_in, n_out) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k1 = jax.random.split(key)
+        if cfg.init == "xavier":
+            w = jax.random.normal(k1, (n_in, n_out)) * jnp.sqrt(2.0 / (n_in + n_out))
+        elif cfg.init == "he":
+            w = jax.random.normal(k1, (n_in, n_out)) * jnp.sqrt(2.0 / n_in)
+        elif cfg.init == "random":
+            w = jax.random.uniform(k1, (n_in, n_out), minval=-0.5, maxval=0.5)
+        else:
+            raise ValueError(cfg.init)
+        params.append({"w": w, "b": jnp.zeros((n_out,))})
+    return params
+
+
+def mlp_apply(params, activations, x):
+    a = x
+    for p, act in zip(params, activations):
+        a = ACTIVATIONS[act](a @ p["w"] + p["b"])
+    return a
+
+
+def _loss_fn(params, activations, x, y_onehot):
+    out = mlp_apply(params, activations, x)
+    # MSE against one-hot targets (classic pendigits-era training; stable for
+    # sigmoid/hsig output layers, which saturate under raw cross-entropy)
+    return jnp.mean(jnp.sum((out - y_onehot) ** 2, axis=-1))
+
+
+@dataclass
+class TrainResult:
+    weights: list               # list[np.ndarray (n_in, n_out)] float64
+    biases: list
+    activations: tuple
+    train_acc: float
+    val_acc: float
+    loss_history: list = field(default_factory=list)
+
+
+def _make_update(cfg: TrainConfig):
+    activations = cfg.activations
+
+    def adam_update(params, opt, x, y, step):
+        loss, grads = jax.value_and_grad(_loss_fn)(params, activations, x, y)
+        m, v = opt
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g, m, grads)
+        v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * g * g, v, grads)
+        mhat = jax.tree.map(lambda mi: mi / (1 - b1 ** step), m)
+        vhat = jax.tree.map(lambda vi: vi / (1 - b2 ** step), v)
+        params = jax.tree.map(
+            lambda p, mh, vh: p - cfg.lr * mh / (jnp.sqrt(vh) + eps),
+            params, mhat, vhat)
+        return params, (m, v), loss
+
+    def sgd_update(params, opt, x, y, step):
+        loss, grads = jax.value_and_grad(_loss_fn)(params, activations, x, y)
+        params = jax.tree.map(lambda p, g: p - cfg.lr * g, params, grads)
+        return params, opt, loss
+
+    return jax.jit(adam_update if cfg.optimizer == "adam" else sgd_update)
+
+
+def train(cfg: TrainConfig, x_train: np.ndarray, y_train: np.ndarray,
+          x_val: np.ndarray, y_val: np.ndarray) -> TrainResult:
+    """x_* are float features in [-1, 1); y_* integer class labels."""
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_params(cfg, key)
+    opt = (jax.tree.map(jnp.zeros_like, params),
+           jax.tree.map(jnp.zeros_like, params))
+    update = _make_update(cfg)
+
+    x_train = jnp.asarray(x_train, jnp.float32)
+    y_onehot = jax.nn.one_hot(jnp.asarray(y_train), cfg.structure[-1])
+    x_val_j = jnp.asarray(x_val, jnp.float32)
+    y_val_np = np.asarray(y_val)
+
+    @jax.jit
+    def val_acc_fn(params):
+        out = mlp_apply(params, cfg.activations, x_val_j)
+        return jnp.argmax(out, axis=-1)
+
+    n = x_train.shape[0]
+    full_batch = cfg.optimizer == "gd" or cfg.batch_size >= n
+    rng = np.random.default_rng(cfg.seed)
+    best_val, best_params, patience = -1.0, params, 0
+    losses = []
+    step = 0
+    prev_loss = np.inf
+    for epoch in range(cfg.epochs):
+        if full_batch:
+            step += 1
+            params, opt, loss = update(params, opt, x_train, y_onehot, step)
+            epoch_loss = float(loss)
+        else:
+            perm = rng.permutation(n)
+            epoch_loss = 0.0
+            nb = 0
+            for s in range(0, n, cfg.batch_size):
+                idx = perm[s:s + cfg.batch_size]
+                step += 1
+                params, opt, loss = update(params, opt, x_train[idx],
+                                           y_onehot[idx], step)
+                epoch_loss += float(loss)
+                nb += 1
+            epoch_loss /= max(1, nb)
+        losses.append(epoch_loss)
+        va = float(np.mean(np.asarray(val_acc_fn(params)) == y_val_np)) * 100
+        if va > best_val:
+            best_val, best_params, patience = va, params, 0
+        else:
+            patience += 1
+            if patience >= cfg.early_stop_patience:
+                break
+        if abs(prev_loss - epoch_loss) < cfg.loss_saturation_eps:
+            break
+        prev_loss = epoch_loss
+
+    params = best_params
+    tr_pred = np.asarray(jnp.argmax(
+        mlp_apply(params, cfg.activations, x_train), axis=-1))
+    train_acc = float(np.mean(tr_pred == np.asarray(y_train))) * 100
+    return TrainResult(
+        weights=[np.asarray(p["w"], dtype=np.float64) for p in params],
+        biases=[np.asarray(p["b"], dtype=np.float64) for p in params],
+        activations=cfg.activations,
+        train_acc=train_acc, val_acc=best_val, loss_history=losses)

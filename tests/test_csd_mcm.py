@@ -1,0 +1,75 @@
+"""Properties of the CSD arithmetic and shift-add synthesis (paper II-B, V)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import csd, mcm
+
+
+@given(st.integers(-10**6, 10**6))
+def test_csd_roundtrip(v):
+    assert csd.from_csd(csd.to_csd(v)) == v
+
+
+@given(st.integers(-10**6, 10**6))
+def test_csd_no_adjacent_nonzeros(v):
+    d = csd.to_csd(v)
+    assert all(not (d[i] and d[i + 1]) for i in range(len(d) - 1))
+
+
+@given(st.integers(1, 10**6))
+def test_csd_minimality_vs_binary(v):
+    # CSD never uses more nonzero digits than plain binary
+    assert csd.nnz(v) <= bin(v).count("1")
+
+
+@given(st.integers(-10**5, 10**5).filter(lambda v: v != 0))
+def test_drop_digit_reduces_nnz(v):
+    w = csd.drop_least_significant_digit(v)
+    assert csd.nnz(w) == csd.nnz(v) - 1
+
+
+@given(st.integers(-10**5, 10**5).filter(lambda v: v != 0))
+def test_largest_left_shift(v):
+    lls = csd.largest_left_shift(v)
+    assert v % (1 << lls) == 0
+    assert (v >> lls) & 1
+
+
+def test_paper_fig3_example():
+    """Fig. 3: DBR needs 8 ops for y1=11x1+3x2, y2=5x1+13x2."""
+    M = np.array([[11, 3], [5, 13]])
+    assert mcm.dbr_adder_count(M) == 8          # paper Fig. 3(b)
+    g = mcm.synthesize(M, "cse")
+    assert g.n_adders < 8                        # sharing helps (Fig. 3(c))
+    x = np.random.default_rng(0).integers(-128, 128, (32, 2))
+    np.testing.assert_array_equal(mcm.evaluate(g, x), x @ M.T)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 10**4))
+def test_cmvm_synthesis_exact(m, n, seed):
+    rng = np.random.default_rng(seed)
+    M = rng.integers(-255, 256, (m, n))
+    x = rng.integers(-128, 128, (16, n))
+    for method in ("dbr", "cse"):
+        g = mcm.synthesize(M, method)
+        np.testing.assert_array_equal(mcm.evaluate(g, x), x @ M.T)
+    assert mcm.synthesize(M, "cse").n_adders <= mcm.dbr_adder_count(M)
+
+
+def test_value_bounds_cover_actual():
+    rng = np.random.default_rng(1)
+    M = rng.integers(-200, 200, (3, 4))
+    g = mcm.synthesize(M, "cse")
+    bounds = g.value_bounds(input_max=127)
+    x = rng.integers(-127, 128, (256, 4))
+    outs = mcm.evaluate(g, x)
+    assert np.abs(outs).max() <= max(bounds)
+
+
+def test_mcm_is_cmvm_single_column():
+    consts = np.array([[7], [11], [21]])
+    g = mcm.synthesize(consts, "cse")
+    x = np.arange(-8, 8).reshape(-1, 1)
+    np.testing.assert_array_equal(mcm.evaluate(g, x), x @ consts.T)

@@ -1,0 +1,94 @@
+"""The paper's pipeline: integer semantics, min-q search, both tuners."""
+import numpy as np
+import pytest
+
+from repro.core import (IntMLP, find_min_q, forward_int, hardware_accuracy,
+                        quantize_inputs, quantize_mlp, tune_parallel,
+                        tune_time_multiplexed)
+from repro.core.csd import tnzd
+from repro.core.intmlp import forward_int_jax
+from repro.core.tuning import sls_of
+from repro.data import pendigits
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """A small float MLP trained on the pendigits surrogate."""
+    from repro.train.zaal import TrainConfig, train
+    ds = pendigits.load()
+    (xtr, ytr), (xval, yval) = ds.validation_split()
+    cfg = TrainConfig(structure=(16, 10), epochs=25, seed=3)
+    res = train(cfg, pendigits.to_unit(xtr), ytr,
+                pendigits.to_unit(xval), yval)
+    x_val_int = quantize_inputs(pendigits.to_unit(xval))
+    return res, x_val_int, yval
+
+
+def test_numpy_jax_bit_exact(trained):
+    res, x_val_int, yval = trained
+    acts = ("htanh", "hsig")
+    mlp = quantize_mlp(res.weights, res.biases, acts, q=4)
+    out_np = forward_int(mlp, x_val_int[:256])
+    out_jx = np.asarray(forward_int_jax(mlp, x_val_int[:256]))
+    np.testing.assert_array_equal(out_np, out_jx)
+
+
+def test_activation_semantics():
+    # htanh clamps to [-1,1]; hsig to [0,1]; exact shift arithmetic
+    w = [np.array([[1 << 4]], dtype=np.int64)]   # weight 16 at q=4 => 1.0
+    b = [np.zeros(1, dtype=np.int64)]
+    for act, lo, hi in [("htanh", -128, 127), ("hsig", 0, 127),
+                        ("satlin", 0, 127)]:
+        mlp = IntMLP(w, b, [act], q=4)
+        x = np.array([[-128], [0], [127]], dtype=np.int64)
+        out = forward_int(mlp, x)
+        assert out.min() >= lo and out.max() <= hi, act
+
+
+def test_min_q_search(trained):
+    res, x_val_int, yval = trained
+    qr = find_min_q(res.weights, res.biases, ("htanh", "hsig"),
+                    x_val_int, yval)
+    assert 1 <= qr.q <= 16
+    assert qr.ha > 50.0                          # network works in hardware
+    # stopping rule: last improvement <= 0.1 (or the cap was hit)
+    if len(qr.history) >= 2 and qr.q < 16:
+        assert qr.history[-1][1] - qr.history[-2][1] <= 0.1
+
+
+def test_tune_parallel_reduces_tnzd(trained):
+    res, x_val_int, yval = trained
+    qr = find_min_q(res.weights, res.biases, ("htanh", "hsig"),
+                    x_val_int, yval)
+    before = tnzd(qr.mlp.weights)
+    tr = tune_parallel(qr.mlp, x_val_int, yval, max_sweeps=3)
+    after = tnzd(tr.mlp.weights)
+    assert after < before                        # paper Table I -> II
+    assert tr.bha >= tr.initial_ha               # never loses hw accuracy
+
+
+def test_tune_time_multiplexed_raises_sls(trained):
+    res, x_val_int, yval = trained
+    qr = find_min_q(res.weights, res.biases, ("htanh", "hsig"),
+                    x_val_int, yval)
+    sls_before = [sls_of(qr.mlp.weights[k][:, m])
+                  for k in range(len(qr.mlp.weights))
+                  for m in range(qr.mlp.weights[k].shape[1])]
+    tr = tune_time_multiplexed(qr.mlp, x_val_int, yval, scope="neuron",
+                               max_sweeps=2)
+    sls_after = [sls_of(tr.mlp.weights[k][:, m])
+                 for k in range(len(tr.mlp.weights))
+                 for m in range(tr.mlp.weights[k].shape[1])]
+    assert sum(sls_after) >= sum(sls_before)     # paper IV-C objective
+    assert tr.bha >= tr.initial_ha
+
+
+def test_tune_ann_scope(trained):
+    res, x_val_int, yval = trained
+    qr = find_min_q(res.weights, res.biases, ("htanh", "hsig"),
+                    x_val_int, yval)
+    all_before = sls_of(np.concatenate([w.ravel() for w in qr.mlp.weights]))
+    tr = tune_time_multiplexed(qr.mlp, x_val_int, yval, scope="ann",
+                               max_sweeps=2)
+    all_after = sls_of(np.concatenate([w.ravel() for w in tr.mlp.weights]))
+    assert all_after >= all_before

@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import csd_expand, csd_matvec, qmatmul, quantize_pot
+from repro.kernels import ref as kref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("M,K,N", [
+    (256, 512, 256), (128, 1024, 128), (8, 512, 256),
+    (300, 700, 130),              # non-divisible: exercises padding
+    (1024, 512, 512),
+])
+def test_qmatmul_exact(M, K, N):
+    x = RNG.integers(-128, 128, (M, K)).astype(np.int8)
+    w = RNG.integers(-128, 128, (K, N)).astype(np.int8)
+    e = RNG.integers(0, 14, (N,)).astype(np.int32)
+    y = qmatmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(e))
+    yr = kref.qmatmul_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(e))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_qmatmul_dtypes(out_dtype):
+    x = RNG.integers(-128, 128, (256, 512)).astype(np.int8)
+    w = RNG.integers(-128, 128, (512, 256)).astype(np.int8)
+    e = RNG.integers(0, 8, (256,)).astype(np.int32)
+    from repro.kernels.qmatmul import qmatmul_kernel
+    y = qmatmul_kernel(jnp.asarray(x), jnp.asarray(w), jnp.asarray(e),
+                       bm=256, bn=256, bk=512, out_dtype=out_dtype,
+                       interpret=True)
+    assert y.dtype == out_dtype
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**4))
+def test_qmatmul_property(seed):
+    rng = np.random.default_rng(seed)
+    M, K, N = rng.integers(1, 64), rng.integers(1, 600), rng.integers(1, 300)
+    x = rng.integers(-128, 128, (M, K)).astype(np.int8)
+    w = rng.integers(-128, 128, (K, N)).astype(np.int8)
+    e = rng.integers(-4, 14, (N,)).astype(np.int32)
+    y = qmatmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(e))
+    yr = kref.qmatmul_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(e))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 16, 128), (64, 40, 30),
+                                   (200, 16, 10)])
+def test_csd_matvec_exact(M, K, N):
+    W = RNG.integers(-255, 256, (K, N))
+    x = RNG.integers(-128, 128, (M, K)).astype(np.int32)
+    y = csd_matvec(jnp.asarray(x), w_int=W)
+    expect = np.asarray(x, np.int64) @ np.asarray(W, np.int64)
+    np.testing.assert_array_equal(np.asarray(y, np.int64), expect)
+
+
+def test_csd_matvec_matches_ref_kernel_oracle():
+    W = RNG.integers(-100, 100, (16, 24))
+    planes = jnp.asarray(csd_expand(W))
+    x = jnp.asarray(RNG.integers(-128, 128, (32, 16)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(csd_matvec(x, planes=planes)),
+        np.asarray(kref.csd_matvec_ref(x, planes)))
+
+
+def test_csd_planes_are_valid_csd():
+    W = RNG.integers(-255, 256, (8, 8))
+    planes = csd_expand(W)
+    assert set(np.unique(planes)) <= {-1, 0, 1}
+    # adjacent digit planes never both nonzero at the same position
+    both = (planes[:-1] != 0) & (planes[1:] != 0)
+    assert not both.any()
+    # reconstruction
+    recon = sum((planes[d].astype(np.int64) << d)
+                for d in range(planes.shape[0]))
+    np.testing.assert_array_equal(recon, W)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10**4))
+def test_quantize_pot_property(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, rng.uniform(1e-3, 10), (64, 32)).astype(np.float32)
+    wq, e = quantize_pot(jnp.asarray(w))
+    assert wq.dtype == jnp.int8
+    recon = np.asarray(wq, np.float32) * np.exp2(-np.asarray(e))[None, :]
+    err = np.abs(recon - w).max()
+    # PoT grid step = 2^-e; per-channel max error <= half step
+    step = np.exp2(-np.asarray(e, np.float32))
+    assert err <= step.max() * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel vs exact oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Sq,Skv,Hq,Hkv,D,causal,window", [
+    (2, 128, 128, 4, 2, 64, True, 0),
+    (1, 256, 256, 8, 8, 128, True, 0),
+    (2, 100, 300, 4, 1, 64, True, 0),    # padding + cross-length causal
+    (1, 256, 256, 4, 2, 64, True, 64),   # local window
+    (2, 64, 200, 4, 4, 32, False, 0),    # non-causal (cross attention)
+])
+def test_flash_attention_vs_ref(B, Sq, Skv, Hq, Hkv, D, causal, window):
+    from repro.kernels import flash_attention
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(0, 1, (B, Sq, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, Skv, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, Skv, Hkv, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=64, bk=64)
+    ref = kref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_matches_model_chunked():
+    """The jnp chunked attention in the model and the Pallas kernel agree."""
+    from repro.kernels import flash_attention
+    from repro.nn.layers import chunked_attention
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(0, 1, (2, 96, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (2, 96, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (2, 96, 2, 32)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    b = chunked_attention(q, k, v, causal=True, block_q=32, block_kv=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,W", [(2, 64, 128), (1, 100, 70), (2, 256, 256)])
+def test_linear_scan_vs_ref(B, S, W):
+    """Fused RG-LRU recurrence kernel == lax.scan oracle."""
+    from repro.kernels.linear_scan import linear_scan, linear_scan_ref
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(rng.uniform(0.7, 1.0, (B, S, W)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 0.1, (B, S, W)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(linear_scan(a, x, bt=32, bw=64)),
+                               np.asarray(linear_scan_ref(a, x)),
+                               rtol=1e-5, atol=1e-5)

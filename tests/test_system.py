@@ -1,0 +1,39 @@
+"""End-to-end paper pipeline: train -> quantize -> tune -> SIMURG -> costs."""
+import numpy as np
+
+from repro.core import find_min_q, quantize_inputs, tune_parallel
+from repro.core.archs import design_cost
+from repro.core.csd import tnzd
+from repro.core import simurg
+from repro.data import pendigits
+from repro.train.zaal import TrainConfig, train
+
+
+def test_full_paper_pipeline(tmp_path):
+    ds = pendigits.load()
+    (xtr, ytr), (xval, yval) = ds.validation_split()
+    cfg = TrainConfig(structure=(16, 10), epochs=20, seed=1)
+    res = train(cfg, pendigits.to_unit(xtr), ytr,
+                pendigits.to_unit(xval), yval)
+    assert res.val_acc > 70.0
+
+    acts = ("htanh", "hsig")
+    xval_int = quantize_inputs(pendigits.to_unit(xval))
+    qr = find_min_q(res.weights, res.biases, acts, xval_int, yval)
+    before = tnzd(qr.mlp.weights + qr.mlp.biases)
+    tuned = tune_parallel(qr.mlp, xval_int, yval, max_sweeps=4)
+    after = tnzd(tuned.mlp.weights + tuned.mlp.biases)
+
+    # the paper's two headline claims, relative form:
+    assert after <= before * 0.8, (before, after)     # tnzd down >= 20%
+    assert tuned.bha >= qr.ha                         # no hw-accuracy loss
+
+    # multiplierless design reduces area vs behavioral (Fig. 13 vs 17)
+    beh = design_cost(tuned.mlp, "parallel", "behavioral")
+    cmvm = design_cost(tuned.mlp, "parallel", "cmvm")
+    assert cmvm.area_um2 < beh.area_um2
+
+    # SIMURG emits the design
+    out = simurg.generate(tuned.mlp, arch="parallel", style="cmvm")
+    out.write(str(tmp_path))
+    assert (tmp_path / "report.json").exists()
