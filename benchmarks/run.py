@@ -49,6 +49,47 @@ def bench_kernels():
     return rows
 
 
+def bench_tuning():
+    """Tentpole benchmark: the paper's weight-tuning hot loop, serial numpy
+    re-evaluation (seed path) vs the batched hardware-accuracy engine
+    (repro.eval, DESIGN.md 7).  Same greedy decisions bit-for-bit; wall-clock
+    of full tune_parallel runs on the pendigits validation split (>= 1k
+    samples), plus the large-validation regime where batching matters most."""
+    import numpy as np
+    from repro.core import find_min_q, quantize_inputs, tune_parallel
+    from repro.data import pendigits
+    from repro.train.zaal import TrainConfig, train
+
+    ds = pendigits.load()
+    (xtr, ytr), (xval, yval) = ds.validation_split()
+    x_val = quantize_inputs(pendigits.to_unit(xval))
+    cfg = TrainConfig(structure=(16, 16, 10), epochs=25, seed=3)
+    res = train(cfg, pendigits.to_unit(xtr), ytr,
+                pendigits.to_unit(xval), yval)
+    qr = find_min_q(res.weights, res.biases, ("htanh", "htanh", "hsig"),
+                    x_val, yval)
+    rows = []
+    for name, xv, yv in [
+            (f"val{x_val.shape[0]}", x_val, yval),
+            (f"val{4 * x_val.shape[0]}",
+             np.concatenate([x_val] * 4), np.concatenate([yval] * 4))]:
+        t0 = time.time()
+        ts = tune_parallel(qr.mlp, xv, yv, max_sweeps=3, engine="serial")
+        t_serial = time.time() - t0
+        t0 = time.time()
+        tb = tune_parallel(qr.mlp, xv, yv, max_sweeps=3, engine="batched")
+        t_batched = time.time() - t0
+        assert ts.bha == tb.bha and ts.log == tb.log, "decision mismatch!"
+        rows.append((f"tuning/tune_parallel/16-16-10/{name}",
+                     t_batched * 1e6,
+                     f"serial_s={t_serial:.3f};batched_s={t_batched:.3f};"
+                     f"speedup={t_serial / t_batched:.2f}x;"
+                     f"identical_decisions=yes;"
+                     f"cands={tb.stats['candidates']};"
+                     f"eval_calls={tb.stats['eval_calls']}"))
+    return rows
+
+
 def bench_roofline():
     """Summarize the dry-run ledger (produced by repro.launch.dryrun)."""
     path = os.path.join(os.path.dirname(__file__), "..",
@@ -132,6 +173,7 @@ def bench_ptq_decode():
 
 
 SECTIONS = {
+    "tuning": bench_tuning,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
     "serving": bench_serving,

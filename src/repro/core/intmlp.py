@@ -49,23 +49,30 @@ class IntMLP:
         return [self.weights[0].shape[0]] + [w.shape[1] for w in self.weights]
 
 
-def _apply_act(acc: np.ndarray, act: str, scale_pow: int) -> np.ndarray:
-    """Apply a hardware activation on an accumulator at scale 2^scale_pow."""
-    one = np.int64(1) << scale_pow
-    if act == "lin":
-        return acc
+def act_requant(acc, act: str, q: int, xp=np):
+    """Hardware activation + 8-bit requantization on an accumulator at scale
+    2^(q+FRAC) — the single source of the activation contract.
+
+    * ``htanh``/``satlin`` clamp to the representable band; ``relu`` clamps to
+      [0, 1) too so the 8-bit requantization cannot wrap (documented
+      deviation, DESIGN 8); ``hsig(y) = clamp(y/2 + 1/2, 0, 1)`` is exact
+      shift-then-offset arithmetic.
+    * Works on numpy arrays (any integer dtype; the clamp constant follows
+      the accumulator dtype, so int32 stays int32) and, with
+      ``xp=jax.numpy``, on traced jnp arrays — this is what keeps every
+      evaluation backend in ``repro.eval`` bit-exact against
+      :func:`forward_int`.
+    """
+    one = acc.dtype.type(1 << (q + FRAC))
     if act == "htanh":
-        return np.clip(acc, -one, one)
-    if act == "satlin":
-        return np.clip(acc, 0, one)
-    if act == "relu":
-        # saturating relu: clamp to the representable [0, 1) band so the 8-bit
-        # requantization below cannot wrap (documented deviation, DESIGN 8).
-        return np.clip(acc, 0, one)
-    if act == "hsig":
-        # hsig(y) = clamp(y/2 + 1/2, 0, 1) -- exact: shift then offset
-        return np.clip((acc >> 1) + (one >> 1), 0, one)
-    raise ValueError(f"unknown hardware activation {act!r}")
+        acc = xp.clip(acc, -one, one)
+    elif act in ("satlin", "relu"):
+        acc = xp.clip(acc, 0, one)
+    elif act == "hsig":
+        acc = xp.clip((acc >> 1) + (one >> 1), 0, one)
+    elif act != "lin":
+        raise ValueError(f"unknown hardware activation {act!r}")
+    return xp.clip(acc >> q, ACT_MIN, ACT_MAX)
 
 
 def forward_int(mlp: IntMLP, x_int: np.ndarray, return_acc: bool = False) -> np.ndarray:
@@ -80,10 +87,7 @@ def forward_int(mlp: IntMLP, x_int: np.ndarray, return_acc: bool = False) -> np.
     for w, b, act in zip(mlp.weights, mlp.biases, mlp.activations):
         acc = a @ w.astype(np.int64) + (b.astype(np.int64) << FRAC)
         last_acc = acc
-        scale_pow = mlp.q + FRAC
-        acc = _apply_act(acc, act, scale_pow)
-        # requantize back to 8-bit activations (arithmetic shift by q)
-        a = np.clip(acc >> mlp.q, ACT_MIN, ACT_MAX)
+        a = act_requant(acc, act, mlp.q)
     return last_acc if return_acc else a
 
 
@@ -111,14 +115,5 @@ def forward_int_jax(mlp: IntMLP, x_int):
     for w, b, act in zip(mlp.weights, mlp.biases, mlp.activations):
         acc = a @ jnp.asarray(w, dtype=jnp.int32) + (
             jnp.asarray(b, dtype=jnp.int32) << FRAC)
-        one = jnp.int32(1 << (mlp.q + FRAC))
-        if act == "htanh":
-            acc = jnp.clip(acc, -one, one)
-        elif act in ("satlin", "relu"):
-            acc = jnp.clip(acc, 0, one)
-        elif act == "hsig":
-            acc = jnp.clip((acc >> 1) + (one >> 1), 0, one)
-        elif act != "lin":
-            raise ValueError(act)
-        a = jnp.clip(acc >> mlp.q, ACT_MIN, ACT_MAX)
+        a = act_requant(acc, act, mlp.q, xp=jnp)
     return a

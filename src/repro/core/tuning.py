@@ -10,6 +10,15 @@ the validation split:
   or whole-network (scope='ann'), maximize the smallest left shift (sls) among
   the weights so the MAC multiplier/adder/register narrow; with the paper's
   bias-nudging fallback (+-4) when a candidate alone loses accuracy.
+
+Both run on the batched hardware-accuracy engine (``repro.eval``, DESIGN.md 7)
+by default: candidate mutations are proposed in chunks, scored in one jitted
+integer forward each, and committed with the *first-acceptor* scan — the first
+candidate (in serial visit order) whose accuracy clears the greedy threshold
+is committed and everything scored after it against the stale network is
+re-proposed.  Every accept/reject decision therefore reproduces the serial
+hill-climb exactly; ``engine="serial"`` keeps the original per-candidate
+numpy loop (the regression baseline and benchmark reference).
 """
 from __future__ import annotations
 
@@ -22,6 +31,10 @@ from .intmlp import IntMLP, hardware_accuracy
 
 __all__ = ["tune_parallel", "tune_time_multiplexed", "TuneResult", "sls_of"]
 
+# Lower bound on the time-multiplexed tuner's weight-chunk sizing (matches
+# the evaluator's small jit size, so padded bias-nudge batches stay cheap).
+_SMALL = 16
+
 
 @dataclass
 class TuneResult:
@@ -31,6 +44,7 @@ class TuneResult:
     replacements: int          # number of committed weight replacements
     sweeps: int                # full passes over the weights
     log: list = field(default_factory=list)
+    stats: dict = field(default_factory=dict)  # evaluator counters (batched)
 
 
 def _evaluator(x_val_int, y_val):
@@ -39,12 +53,76 @@ def _evaluator(x_val_int, y_val):
     return ev
 
 
+def _batched_ev(mlp, x_val_int, y_val, backend, chunk, shard):
+    from repro.eval import BatchedHWEvaluator
+    return BatchedHWEvaluator(mlp, x_val_int, y_val, backend=backend,
+                              chunk=chunk, shard=shard)
+
+
 # ---------------------------------------------------------------------------
 # Section IV-B: parallel architecture — CSD digit removal
 # ---------------------------------------------------------------------------
 
 def tune_parallel(mlp: IntMLP, x_val_int: np.ndarray, y_val: np.ndarray,
-                  *, max_sweeps: int = 50) -> TuneResult:
+                  *, max_sweeps: int = 50, engine: str = "batched",
+                  backend: str = "auto", chunk: int = 128,
+                  shard: bool = False) -> TuneResult:
+    """Greedy CSD-digit removal (paper IV-B).  ``engine="batched"`` scores
+    candidate chunks on the repro.eval engine with decisions identical to the
+    serial loop; ``engine="serial"`` is the original reference path."""
+    if engine == "serial":
+        return _tune_parallel_serial(mlp, x_val_int, y_val,
+                                     max_sweeps=max_sweeps)
+    if engine != "batched":
+        raise ValueError(engine)
+    from repro.eval import Candidate
+    ev = _batched_ev(mlp, x_val_int, y_val, backend, chunk, shard)
+    bha = ev.accuracy()                             # step 1
+    initial = bha
+    replaced_total = 0
+    sweeps = 0
+    log = []
+    while sweeps < max_sweeps:                      # step 3 loop
+        sweeps += 1
+        replaced_this_sweep = 0
+        for k, w in enumerate(ev.mlp.weights):      # step 2: each weight != 0
+            n_out = w.shape[1]
+            flat = w.ravel()
+            # Candidate values are fixed at layer entry: a commit only ever
+            # rewrites the committed index itself, which is never revisited
+            # this sweep, so the serial visit-time values are these.
+            cands = [Candidate(k, idx % n_out, idx // n_out,
+                               csd.drop_least_significant_digit(v))
+                     for idx, v in enumerate(int(x) for x in flat) if v != 0]
+            # Chain scan: one device call follows the serial greedy chain
+            # through the whole chunk — candidate c is scored against the
+            # prefix state with every earlier accept applied, so all chunk
+            # decisions (step 2b) are made in one call, then committed in one
+            # cache refresh.
+            pos = 0
+            while pos < len(cands):
+                batch = cands[pos:pos + ev.chunk]
+                flags, has = ev.evaluate_chain(batch, bha)
+                for flag, ha in zip(flags, has):
+                    if flag:
+                        bha = ha                    # step 2b running best
+                accepted = [c for c, flag in zip(batch, flags) if flag]
+                if accepted:
+                    ev.commit_many(accepted)
+                    replaced_this_sweep += len(accepted)
+                pos += len(batch)
+        replaced_total += replaced_this_sweep
+        log.append((sweeps, replaced_this_sweep, bha))
+        if replaced_this_sweep == 0:                # step 4
+            break
+    return TuneResult(mlp=ev.mlp, bha=bha, initial_ha=initial,
+                      replacements=replaced_total, sweeps=sweeps, log=log,
+                      stats=dict(ev.stats, backend=ev.backend))
+
+
+def _tune_parallel_serial(mlp: IntMLP, x_val_int: np.ndarray,
+                          y_val: np.ndarray, *,
+                          max_sweeps: int = 50) -> TuneResult:
     ev = _evaluator(x_val_int, y_val)
     mlp = mlp.copy()
     bha = ev(mlp)                                   # step 1
@@ -112,9 +190,111 @@ def _group_weights(mlp: IntMLP, group):
     return np.concatenate([mlp.weights[k][:, m] for k, m in group])
 
 
-def tune_time_multiplexed(mlp: IntMLP, x_val_int: np.ndarray, y_val: np.ndarray,
-                          *, scope: str = "neuron", bias_range: int = 4,
-                          max_sweeps: int = 50) -> TuneResult:
+def _sls_candidates(mlp: IntMLP, group):
+    """Serial visit-order weight candidates of one group: (k, m, n, w, [pw]).
+
+    sls / maxbw are fixed at group entry (the serial tuner computes them once
+    per group per sweep); per-weight values are group-entry values too, since
+    a commit only rewrites the committed weight, visited once per pass.
+    """
+    gvals = _group_weights(mlp, group)
+    sls = sls_of(gvals)                              # step 2
+    maxbw = max((_bitwidth(v) for v in gvals if v != 0), default=0)
+    out = []
+    for (k, m) in group:
+        col = mlp.weights[k][:, m]
+        for n in range(col.shape[0]):
+            w_kmn = int(col[n])
+            if w_kmn == 0:
+                continue
+            if csd.largest_left_shift(w_kmn) != sls:    # step 2a
+                continue
+            step = 1 << (sls + 1)
+            pw1 = w_kmn - (w_kmn % step)                # step 2b
+            pws = [pw for pw in (pw1, pw1 + step) if _bitwidth(pw) <= maxbw]
+            if pws:
+                out.append((k, m, n, w_kmn, pws))
+    return out
+
+
+def tune_time_multiplexed(mlp: IntMLP, x_val_int: np.ndarray,
+                          y_val: np.ndarray, *, scope: str = "neuron",
+                          bias_range: int = 4, max_sweeps: int = 50,
+                          engine: str = "batched", backend: str = "auto",
+                          chunk: int = 128, shard: bool = False) -> TuneResult:
+    """Greedy smallest-left-shift maximization (paper IV-C) with bias
+    nudging.  Decision-identical engines as in :func:`tune_parallel`."""
+    if engine == "serial":
+        return _tune_tm_serial(mlp, x_val_int, y_val, scope=scope,
+                               bias_range=bias_range, max_sweeps=max_sweeps)
+    if engine != "batched":
+        raise ValueError(engine)
+    from repro.eval import Candidate
+    ev = _batched_ev(mlp, x_val_int, y_val, backend, chunk, shard)
+    bha = ev.accuracy()                              # step 1
+    initial = bha
+    replaced_total = 0
+    sweeps = 0
+    log = []
+    dbs = [db for db in range(-bias_range, bias_range + 1) if db != 0]
+    while sweeps < max_sweeps:                       # step 3 loop
+        sweeps += 1
+        improved_any = False
+        for group in _neuron_groups(ev.mlp, scope):
+            wcands = _sls_candidates(ev.mlp, group)
+            pos = 0
+            # Weights per phase-1 chunk; each weight holds <= 2 pw candidates.
+            n_weights = max(_SMALL, ev.chunk) // 2
+            while pos < len(wcands):
+                chunk_w = wcands[pos:pos + n_weights]
+                # evaluator batches must share a layer: truncate the chunk at
+                # the first layer boundary (scope='ann' groups span layers)
+                k0 = chunk_w[0][0]
+                same = next((i for i, wc in enumerate(chunk_w)
+                             if wc[0] != k0), len(chunk_w))
+                chunk_w = chunk_w[:same]
+                flat = [Candidate(k, m, n, pw)
+                        for (k, m, n, _w, pws) in chunk_w for pw in pws]
+                has = ev.evaluate(flat)
+                committed = False
+                off = 0
+                for j, (k, m, n, _w, pws) in enumerate(chunk_w):
+                    w_has = has[off:off + len(pws)]
+                    off += len(pws)
+                    ranked = sorted(zip(w_has, pws), reverse=True)
+                    ha_best, pw_best = ranked[0]
+                    if ha_best >= bha:               # step 2c
+                        ev.commit(Candidate(k, m, n, pw_best))
+                        bha = ha_best
+                    else:
+                        # step 2d: bias nudging with the best candidate set
+                        b_cands = [Candidate(k, m, n, pw_best, dbias=db)
+                                   for db in dbs]
+                        b_has = ev.evaluate(b_cands)
+                        hit = next((t for t, ha in enumerate(b_has)
+                                    if ha >= bha), None)
+                        if hit is None:
+                            continue                 # revert: nothing committed
+                        ev.commit(b_cands[hit])
+                        bha = b_has[hit]
+                    replaced_total += 1
+                    improved_any = True
+                    committed = True
+                    pos += j + 1                     # rescan after the commit
+                    break
+                if not committed:
+                    pos += len(chunk_w)
+        log.append((sweeps, replaced_total, bha))
+        if not improved_any:                          # step 4
+            break
+    return TuneResult(mlp=ev.mlp, bha=bha, initial_ha=initial,
+                      replacements=replaced_total, sweeps=sweeps, log=log,
+                      stats=dict(ev.stats, backend=ev.backend))
+
+
+def _tune_tm_serial(mlp: IntMLP, x_val_int: np.ndarray, y_val: np.ndarray,
+                    *, scope: str = "neuron", bias_range: int = 4,
+                    max_sweeps: int = 50) -> TuneResult:
     ev = _evaluator(x_val_int, y_val)
     mlp = mlp.copy()
     bha = ev(mlp)                                    # step 1

@@ -1,0 +1,16 @@
+"""Batched hardware-accuracy evaluation engine (DESIGN.md 7).
+
+The paper's tuning loops (Sections IV-B/IV-C) are greedy hill-climbers that
+re-score *hardware accuracy* after every candidate weight mutation.  This
+package evaluates whole batches of candidate ``IntMLP`` mutations in a single
+jitted integer forward over the validation set — bit-exact against the numpy
+``forward_int`` oracle in ``repro.core.intmlp`` — with layer-prefix activation
+caching (a mutation in layer k only recomputes layers >= k), an int32-safe jax
+backend (Pallas ``csd_matvec`` tail on TPU, pure-jnp elsewhere), an int64
+numpy fallback, and optional ``shard_map`` data-parallel sharding of the
+validation batch.
+"""
+from .batched import (BatchedHWEvaluator, Candidate, ha_pct,  # noqa: F401
+                      int32_safe_bound)
+
+__all__ = ["BatchedHWEvaluator", "Candidate", "ha_pct", "int32_safe_bound"]

@@ -1,0 +1,629 @@
+"""Batched bit-exact hardware-accuracy evaluator (DESIGN.md 7).
+
+Core idea: a tuning candidate mutates ONE column of ONE layer (a single
+weight w[row, col], optionally together with the same column's bias).  With
+the committed network's per-layer activations and accumulators cached, the
+candidate's forward pass collapses to
+
+* layer k     : a column update   acc[:, col] += a[:, row] * dw + (db << 7)
+* layer k + 1 : a rank-1 update   acc' = acc + outer(dcol, W[k+1][col])
+* layers k+2+ : dense batched matmuls over the (K * M, n) flattened batch
+
+and the final argmax-vs-label comparison is computed without an argmax via a
+unique integer score ``a * n + (n - 1 - j)`` whose row maximum identifies
+numpy's first-index argmax exactly (ties included).  All arithmetic matches
+``repro.core.intmlp.forward_int`` bit for bit; accuracies are returned through
+the same ``100.0 * (count / M)`` float64 expression the numpy oracle uses, so
+greedy ``>=`` threshold decisions are reproduced exactly.
+
+Backends
+--------
+* ``numpy``  — int64, always exact, vectorized over the candidate batch.
+* ``jnp``    — int32, jitted; chosen automatically when the int32 worst-case
+  accumulator bound holds (``int32_safe_bound``), else demoted to numpy.
+* ``pallas`` — ``jnp`` with the dense tail matmuls routed through the
+  ``csd_matvec`` shift-add kernel (bit-exact hardware datapath; the TPU
+  choice — interpret mode elsewhere).
+
+``shard=True`` shards the validation batch across devices with ``shard_map``
+(counts are psum-reduced); rows are padded with label -1 which can never win
+the score comparison.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.intmlp import FRAC, IntMLP, act_requant
+
+__all__ = ["Candidate", "BatchedHWEvaluator", "ha_pct", "int32_safe_bound"]
+
+_NEG = -(1 << 30)      # impossible score: marks padded rows as never-correct
+_SMALL_CHUNK = 16      # secondary jit size for commit-heavy scan phases
+_SPEC_CHUNK = 32       # prefix-composition (speculative) chunk size
+
+
+def ha_pct(count: int, n_val: int) -> float:
+    """The oracle's accuracy expression: ``100.0 * mean(pred == labels)``.
+
+    ``count / n_val`` in float64 is exactly ``np.mean`` of the boolean hit
+    vector, so greedy comparisons against serial-tuner thresholds agree.
+    """
+    return 100.0 * (count / n_val)
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One mutation of an IntMLP: weight [row, col] of ``layer`` set to
+    ``wnew`` (when ``row >= 0``) and/or the same column's bias shifted by
+    ``dbias``.  Weight and bias mutations share ``col`` so the whole candidate
+    stays a single-column update (all the tuners need)."""
+
+    layer: int
+    col: int
+    row: int = -1
+    wnew: int = 0
+    dbias: int = 0
+
+
+def int32_safe_bound(mlp: IntMLP, slack_mult: int = 4,
+                     bias_slack: int = 16) -> bool:
+    """True when every layer's worst-case |accumulator| — including a mutated
+    weight up to ``slack_mult * max|W|`` and a bias nudged by ``bias_slack`` —
+    stays below 2^31, so the int32 jax path is bit-exact (DESIGN.md 7.3)."""
+    amax = 1 << FRAC
+    for w, b in zip(mlp.weights, mlp.biases):
+        w = np.abs(np.asarray(w, dtype=np.int64))
+        col_sum = int(w.sum(axis=0).max()) if w.size else 0
+        wmax = int(w.max()) if w.size else 0
+        bmax = int(np.abs(np.asarray(b, dtype=np.int64)).max()) if b.size else 0
+        bound = (col_sum + slack_mult * max(wmax, 1)) * amax \
+            + ((bmax + bias_slack) << FRAC)
+        if bound >= 2 ** 31:
+            return False
+    return True
+
+
+# the single activation-contract helper from the oracle module
+_act_requant_np = act_requant
+
+
+class BatchedHWEvaluator:
+    """Stateful batched evaluator: owns the committed IntMLP, its layer-prefix
+    caches, and per-(layer, chunk) jitted tail functions.
+
+    Usage (the tuners' contract)::
+
+        ev = BatchedHWEvaluator(mlp, x_val_int, y_val)
+        bha = ev.accuracy()
+        has = ev.evaluate([Candidate(...), ...])   # all in one layer
+        ev.commit(candidate)                       # mutates + refreshes caches
+    """
+
+    def __init__(self, mlp: IntMLP, x_val_int: np.ndarray,
+                 labels: np.ndarray, *, backend: str = "auto",
+                 chunk: int = 128, shard: bool = False):
+        if backend not in ("auto", "numpy", "jnp", "pallas"):
+            raise ValueError(backend)
+        self._mlp = mlp.copy()
+        self.n_val = int(x_val_int.shape[0])
+        self.chunk = int(chunk)
+        self.stats = {"eval_calls": 0, "candidates": 0, "commits": 0,
+                      "refreshes": 0}
+
+        self._n_shards = 1
+        if backend == "numpy":
+            shard = False
+        if shard:
+            import jax
+            self._n_shards = jax.device_count()
+
+        pad = (-self.n_val) % self._n_shards
+        x = np.asarray(x_val_int, dtype=np.int64)
+        lab = np.asarray(labels, dtype=np.int64)
+        if pad:
+            x = np.concatenate([x, np.zeros((pad,) + x.shape[1:], np.int64)])
+            lab = np.concatenate([lab, np.full((pad,), -1, np.int64)])
+        self._x = x
+        self._labels = lab
+        self._mp = self.n_val + pad            # padded row count
+
+        self._resolve_backend(backend)
+        self._mesh = None
+        if shard and self._n_shards > 1 and self.backend != "numpy":
+            import jax
+            from jax.sharding import Mesh
+            self._mesh = Mesh(np.asarray(jax.devices()), ("data",))
+
+        # Chain scans run on device only where that wins (TPU / sharded);
+        # on CPU the sparsity-aware numpy chain is faster (DESIGN.md 7.5).
+        self._chain_scan = False
+        if self.backend != "numpy":
+            import jax
+            self._chain_scan = (self._mesh is not None
+                                or jax.default_backend() == "tpu")
+
+        self._jax = None
+        self._refresh(0)
+
+    # -- public API --------------------------------------------------------
+
+    @property
+    def mlp(self) -> IntMLP:
+        """The committed network (read for candidate generation; mutate only
+        through :meth:`commit`)."""
+        return self._mlp
+
+    def accuracy(self) -> float:
+        """Hardware accuracy (%) of the committed network, from the cache."""
+        return ha_pct(self._count, self.n_val)
+
+    def evaluate(self, cands: Sequence[Candidate]) -> list[float]:
+        """Hardware accuracy (%) of each candidate, committed state untouched.
+
+        All candidates must target the same layer (the tuners' sweep order
+        guarantees this); batches larger than ``chunk`` are split internally.
+        """
+        if not cands:
+            return []
+        k = cands[0].layer
+        if any(c.layer != k for c in cands):
+            raise ValueError("candidates must share a layer")
+        out: list[float] = []
+        for lo in range(0, len(cands), self.chunk):
+            out.extend(self._eval_chunk(k, cands[lo:lo + self.chunk]))
+        self.stats["eval_calls"] += (len(cands) + self.chunk - 1) // self.chunk
+        self.stats["candidates"] += len(cands)
+        return out
+
+    @property
+    def spec_chunk(self) -> int:
+        """Max candidates per :meth:`evaluate_prefix` call."""
+        return _SPEC_CHUNK
+
+    def evaluate_prefix(self, cands: Sequence[Candidate]) -> list[float]:
+        """Hardware accuracy (%) of *prefix-composed* networks: entry ``c`` is
+        the committed network with candidates ``0..c`` ALL applied.
+
+        This is the speculative mode for commit-heavy greedy phases: while
+        every prefix keeps clearing the greedy threshold, the serial tuner
+        would have accepted each candidate in turn, so one call scores a whole
+        run of commits (DESIGN.md 7.5).  Candidates must share a layer and
+        target distinct weights; at most ``spec_chunk`` per call (prefixes
+        cannot span calls).  Committed state is untouched.
+        """
+        if not cands:
+            return []
+        if len(cands) > _SPEC_CHUNK:
+            raise ValueError(f"at most {_SPEC_CHUNK} prefix candidates")
+        k = self._composed_layer(cands)
+        n, wi, wj, dw, db = self._pack(cands, _SPEC_CHUNK)
+        if self.backend == "numpy" or not self._spec_safe(k, dw, db):
+            counts = self._prefix_np(k, wi, wj, dw, db)
+        else:
+            counts = self._jax_counts(k, _SPEC_CHUNK, wi, wj, dw, db,
+                                      kind="spec")
+        self.stats["eval_calls"] += 1
+        self.stats["candidates"] += n
+        return [ha_pct(int(c), self.n_val) for c in counts[:n]]
+
+    def evaluate_chain(self, cands: Sequence[Candidate],
+                       bha: float) -> tuple[list[bool], list[float]]:
+        """Follow the serial greedy chain through ``cands`` in one device
+        call: candidate ``c`` is scored against the network with every
+        *previously accepted* candidate applied, accepted iff its accuracy
+        clears the running best (``>=``, updating it), exactly like the serial
+        hill-climb (DESIGN.md 7.5).  Returns (accept_flags, accuracies);
+        committed state is untouched — commit the accepted candidates with
+        :meth:`commit_many`.
+
+        ``bha`` must be the running best accuracy, which in a greedy sweep is
+        always the committed network's own accuracy.  Accept decisions then
+        reduce to exact integer correct-count comparisons because
+        ``count -> 100.0 * (count / M)`` is strictly increasing.
+        """
+        if not cands:
+            return [], []
+        if len(cands) > self.chunk:
+            raise ValueError(f"at most {self.chunk} chain candidates")
+        k = self._composed_layer(cands)
+        if ha_pct(self._count, self.n_val) != bha:
+            raise ValueError("bha must equal the committed network's "
+                             "accuracy (greedy invariant)")
+        pad_to = _SPEC_CHUNK if len(cands) <= _SPEC_CHUNK else self.chunk
+        n, wi, wj, dw, db = self._pack(cands, pad_to)
+        if self._chain_scan and self._spec_safe(k, dw, db):
+            counts, flags = self._jax_state().chain(k, pad_to, self._count,
+                                                    wi, wj, dw, db)
+        else:
+            counts, flags = self._chain_np(k, wi[:n], wj[:n], dw[:n], db[:n])
+        self.stats["eval_calls"] += 1
+        self.stats["candidates"] += n
+        return ([bool(f) for f in flags[:n]],
+                [ha_pct(int(c), self.n_val) for c in counts[:n]])
+
+    def _chain_np(self, k: int, wi, wj, dw, db):
+        """int64 numpy chain over the cached prefix state.
+
+        Exploits decision sparsity: a single-weight mutation usually leaves
+        the requantized layer-k output column unchanged for most validation
+        rows, so each step recomputes the network tail only for the rows
+        whose column value actually moved, against a maintained per-row
+        correctness bitmap (DESIGN.md 7.5) — work XLA cannot do with static
+        shapes, which is why this is the CPU chain of choice.
+        """
+        mlp = self._mlp
+        q = mlp.q
+        n_layers = len(mlp.weights)
+        last = k == n_layers - 1
+        act_k = mlp.activations[k]
+        # int32 halves the loop's memory traffic; exact under the same
+        # worst-case accumulator guard as the device paths.
+        dt = np.int32 if self._spec_safe(k, dw, db) else np.int64
+        a_k = self._a[k].astype(dt)
+        acc_k = self._acc[k].astype(dt)
+        a_k1 = self._a[k + 1].astype(dt)
+        acc_n = None if last else self._acc[k + 1].astype(dt)
+        w_next = None if last else mlp.weights[k + 1].astype(dt)
+        w_deep = [mlp.weights[l].astype(dt)
+                  for l in range(k + 2, n_layers)]
+        bsh_deep = [(mlp.biases[l].astype(np.int64) << FRAC).astype(dt)
+                    for l in range(k + 2, n_layers)]
+        correct = self._slab == self._score.max(axis=1)           # (Mp,)
+        cnt = self._count
+        n_out = self._a[-1].shape[1]
+        pen = n_out - 1 - np.arange(n_out, dtype=dt)
+        lab_safe = np.maximum(self._labels, 0)
+        real = self._labels >= 0
+        ar = np.arange(self._mp)
+        buf = np.empty(self._mp, dt)
+        counts = np.empty(len(wi), np.int64)
+        flags = np.empty(len(wi), bool)
+        for t in range(len(wi)):
+            j = wj[t]
+            np.multiply(a_k[:, wi[t]], dw[t], out=buf)
+            buf += acc_k[:, j]
+            if db[t]:
+                buf += db[t]
+            h_new = _act_requant_np(buf, act_k, q)
+            dcol = h_new - a_k1[:, j]
+            idx = np.nonzero(dcol)[0]
+            if len(idx) == 0:
+                cnt_c = cnt
+                corr_rows = acc_rows = None
+            else:
+                if last:
+                    rows = a_k1[idx]
+                    rows[:, j] = h_new[idx]
+                    acc_rows = None
+                else:
+                    acc_rows = acc_n[idx] + dcol[idx, None] * w_next[j][None]
+                    rows = _act_requant_np(acc_rows,
+                                           mlp.activations[k + 1], q)
+                    for li, l in enumerate(range(k + 2, n_layers)):
+                        rows = _act_requant_np(
+                            rows @ w_deep[li] + bsh_deep[li],
+                            mlp.activations[l], q)
+                score = rows * n_out
+                score += pen
+                slab = score[ar[:len(idx)], lab_safe[idx]]
+                corr_rows = (slab == score.max(axis=1)) & real[idx]
+                cnt_c = cnt - int(correct[idx].sum()) + int(corr_rows.sum())
+            ok = cnt_c >= cnt
+            if ok:
+                cnt = cnt_c
+                acc_k[:, j] = buf
+                a_k1[:, j] = h_new
+                if len(idx):
+                    if not last:
+                        acc_n[idx] = acc_rows
+                    correct[idx] = corr_rows
+            counts[t] = cnt_c
+            flags[t] = ok
+        return counts, flags
+
+    def commit_many(self, cands: Sequence[Candidate]) -> None:
+        """Commit a run of same-layer candidates (an accepted prefix from
+        :meth:`evaluate_prefix`) with one cache refresh for the whole run."""
+        if not cands:
+            return
+        k = cands[0].layer
+        for c in cands:
+            if c.layer != k:
+                raise ValueError("candidates must share a layer")
+            if c.row >= 0:
+                self._mlp.weights[k][c.row, c.col] = c.wnew
+            if c.dbias:
+                self._mlp.biases[k][c.col] += c.dbias
+        self._refresh(k)
+        self.stats["commits"] += len(cands)
+        if self.backend != "numpy" and not int32_safe_bound(self._mlp):
+            self._demote("commit pushed accumulators past int32 range")
+
+    def commit(self, c: Candidate) -> None:
+        """Apply one candidate to the committed network and refresh the
+        layer-prefix caches incrementally (column + rank-1 updates; dense
+        recompute only for layers >= c.layer + 2)."""
+        k, j = c.layer, c.col
+        w_k = self._mlp.weights[k]
+        dw = 0
+        if c.row >= 0:
+            dw = int(c.wnew) - int(w_k[c.row, j])
+            w_k[c.row, j] = c.wnew
+        if c.dbias:
+            self._mlp.biases[k][j] += c.dbias
+
+        acc_col = self._acc[k][:, j]
+        if dw:
+            acc_col += self._a[k][:, c.row] * np.int64(dw)
+        if c.dbias:
+            acc_col += np.int64(c.dbias) << FRAC
+        new_col = _act_requant_np(acc_col, self._mlp.activations[k],
+                                  self._mlp.q)
+        n_layers = len(self._mlp.weights)
+        changed = {"layer": k, "a": set(), "acc": {k}, "scores": False}
+        dcol = new_col - self._a[k + 1][:, j]
+        if np.any(dcol):
+            self._a[k + 1][:, j] = new_col
+            changed["a"].add(k + 1)
+            changed["scores"] = True
+            if k < n_layers - 1:
+                self._acc[k + 1] += np.outer(dcol,
+                                             self._mlp.weights[k + 1][j])
+                changed["acc"].add(k + 1)
+                for l in range(k + 1, n_layers):
+                    self._a[l + 1] = _act_requant_np(
+                        self._acc[l], self._mlp.activations[l], self._mlp.q)
+                    changed["a"].add(l + 1)
+                    if l + 1 < n_layers:
+                        self._acc[l + 1] = (
+                            self._a[l + 1] @ self._mlp.weights[l + 1]
+                            + (self._mlp.biases[l + 1].astype(np.int64)
+                               << FRAC))
+                        changed["acc"].add(l + 1)
+            self._refresh_scores()
+        self.stats["commits"] += 1
+
+        if self.backend != "numpy":
+            if not int32_safe_bound(self._mlp):
+                self._demote("commit pushed accumulators past int32 range")
+            else:
+                self._sync_device(changed)
+
+    # -- backend selection -------------------------------------------------
+
+    def _resolve_backend(self, backend: str) -> None:
+        if backend == "numpy":
+            self.backend = "numpy"
+            return
+        if backend == "auto":
+            try:
+                import jax
+                backend = ("pallas" if jax.default_backend() == "tpu"
+                           else "jnp")
+            except Exception:                              # pragma: no cover
+                self.backend = "numpy"
+                return
+        self.backend = backend
+        if not int32_safe_bound(self._mlp):
+            self._demote("weights exceed the int32-safe accumulator bound")
+
+    def _demote(self, why: str) -> None:
+        warnings.warn(f"BatchedHWEvaluator: falling back to the numpy int64 "
+                      f"backend ({why})", stacklevel=3)
+        self.backend = "numpy"
+        self.stats["demoted"] = why
+        self._mesh = None
+        self._jax = None
+        self._chain_scan = False
+
+    # -- cache maintenance -------------------------------------------------
+
+    def _refresh(self, k_from: int) -> None:
+        """Dense cache recompute from layer ``k_from`` (init / safety net)."""
+        mlp = self._mlp
+        n_layers = len(mlp.weights)
+        if k_from == 0:
+            self._a = [self._x] + [None] * n_layers
+            self._acc = [None] * n_layers
+        for l in range(k_from, n_layers):
+            self._acc[l] = (self._a[l] @ mlp.weights[l].astype(np.int64)
+                            + (mlp.biases[l].astype(np.int64) << FRAC))
+            self._a[l + 1] = _act_requant_np(self._acc[l],
+                                             mlp.activations[l], mlp.q)
+        self._refresh_scores()
+        self.stats["refreshes"] += 1
+        if self.backend != "numpy":
+            self._sync_device(None)
+
+    def _refresh_scores(self) -> None:
+        """Final-layer score caches: unique integer scores whose row max is
+        numpy's first-index argmax (DESIGN.md 7.2)."""
+        out = self._a[-1]
+        n_out = out.shape[1]
+        score = out * n_out + (n_out - 1 - np.arange(n_out, dtype=np.int64))
+        if n_out > 1:
+            pre = np.maximum.accumulate(score, axis=1)
+            suf = np.maximum.accumulate(score[:, ::-1], axis=1)[:, ::-1]
+            maxexc = np.empty_like(score)
+            maxexc[:, 0] = suf[:, 1]
+            maxexc[:, -1] = pre[:, -2]
+            if n_out > 2:
+                maxexc[:, 1:-1] = np.maximum(pre[:, :-2], suf[:, 2:])
+        else:
+            maxexc = np.full_like(score, _NEG)
+        lab_safe = np.maximum(self._labels, 0)
+        slab = np.where(self._labels < 0, _NEG,
+                        np.take_along_axis(score, lab_safe[:, None],
+                                           axis=1)[:, 0])
+        smax = score.max(axis=1)
+        self._score = score
+        self._maxexc = maxexc
+        self._slab = slab
+        self._count = int(np.sum(slab == smax))
+
+    # -- evaluation --------------------------------------------------------
+
+    def _pack(self, cands: Sequence[Candidate], pad_to: int):
+        """Candidate arrays (row, col, dw, dbias<<FRAC) padded with no-ops."""
+        k = cands[0].layer
+        w_k = self._mlp.weights[k]
+        n = len(cands)
+        wi = np.zeros(pad_to, np.int64)
+        wj = np.zeros(pad_to, np.int64)
+        dw = np.zeros(pad_to, np.int64)
+        db = np.zeros(pad_to, np.int64)
+        for t, c in enumerate(cands):
+            wj[t] = c.col
+            if c.row >= 0:
+                wi[t] = c.row
+                dw[t] = int(c.wnew) - int(w_k[c.row, c.col])
+            db[t] = c.dbias << FRAC
+        return n, wi, wj, dw, db
+
+    def _eval_chunk(self, k: int, cands: Sequence[Candidate]) -> list[float]:
+        pad_to = _SMALL_CHUNK if len(cands) <= _SMALL_CHUNK else self.chunk
+        n, wi, wj, dw, db = self._pack(cands, pad_to)
+        if self.backend == "numpy":
+            counts = self._counts_np(k, wi, wj, dw, db)
+        else:
+            counts = self._jax_counts(k, pad_to, wi, wj, dw, db)
+        return [ha_pct(int(c), self.n_val) for c in counts[:n]]
+
+    def _composed_layer(self, cands: Sequence[Candidate]) -> int:
+        """Validate a composed (prefix/chain) batch: one layer, and no weight
+        mutated twice — weight deltas are taken against the committed network,
+        so a repeated weight would compose incorrectly.  (Bias mutations are
+        deltas and compose freely.)"""
+        k = cands[0].layer
+        if any(c.layer != k for c in cands):
+            raise ValueError("candidates must share a layer")
+        seen = set()
+        for c in cands:
+            if c.row >= 0:
+                if (c.row, c.col) in seen:
+                    raise ValueError("composed candidates must target "
+                                     "distinct weights")
+                seen.add((c.row, c.col))
+        return k
+
+    def _spec_safe(self, k: int, dw, db) -> bool:
+        """int32 guard for composed (prefix/chain) evaluation: cumulative
+        column deltas at layer k, cumulative rank-1 updates at layer k+1, and
+        the plain accumulator bounds of every deeper dense-tail layer must
+        all stay below 2^31.  Falls back to int64 numpy when violated."""
+        amax = 1 << FRAC
+        mlp = self._mlp
+
+        def base(l):
+            w = np.abs(mlp.weights[l])
+            bmax = int(np.abs(mlp.biases[l]).max()) if mlp.biases[l].size else 0
+            return int(w.sum(axis=0).max()) * amax + (bmax << FRAC)
+
+        extra_k = int(np.abs(dw).sum()) * amax + int(np.abs(db).sum())
+        if base(k) + extra_k >= 2 ** 31:
+            return False
+        if k + 1 < len(mlp.weights):
+            wmax = int(np.abs(mlp.weights[k + 1]).max() or 1)
+            extra = len(dw) * (2 * amax) * wmax
+            if base(k + 1) + extra >= 2 ** 31:
+                return False
+        # dense tail layers see only in-range 8-bit activations, so their
+        # standard accumulator bound is the exact requirement
+        for l in range(k + 2, len(mlp.weights)):
+            if base(l) >= 2 ** 31:
+                return False
+        return True
+
+    def _prefix_np(self, k: int, wi, wj, dw, db) -> np.ndarray:
+        """int64 numpy prefix composition (same algebra as the jax spec tail:
+        masked-prefix column cumsums, then cumulative rank-1 updates)."""
+        mlp = self._mlp
+        q = mlp.q
+        n_layers = len(mlp.weights)
+        b_sz = len(wi)
+        deltas = self._a[k][:, wi] * dw[None, :] + db[None, :]    # (Mp, B)
+        n_out = self._a[-1].shape[1]
+        if k == n_layers - 1:
+            onehot = (wj[:, None] == np.arange(n_out)[None, :]).astype(np.int64)
+            contrib = deltas.T[:, :, None] * onehot[:, None, :]   # (B, Mp, n)
+            acc = self._acc[k][None] + np.cumsum(contrib, axis=0)
+            a = _act_requant_np(acc, mlp.activations[k], q)
+        else:
+            pref = ((wj[None, :] == wj[:, None])
+                    & (np.arange(b_sz)[None, :] <= np.arange(b_sz)[:, None]))
+            cumdelta = deltas @ pref.astype(np.int64).T           # (Mp, B)
+            col_now = self._acc[k][:, wj] + cumdelta
+            h_now = _act_requant_np(col_now, mlp.activations[k], q)
+            h_prev = _act_requant_np(col_now - deltas, mlp.activations[k], q)
+            dcol = h_now - h_prev                                 # (Mp, B)
+            w_next = mlp.weights[k + 1]
+            step = dcol.T[:, :, None] * w_next[wj][:, None, :]
+            acc = self._acc[k + 1][None] + np.cumsum(step, axis=0)
+            a = _act_requant_np(acc, mlp.activations[k + 1], q)
+            for l in range(k + 2, n_layers):
+                b_mp = a.shape[:2]
+                acc = (a.reshape(-1, a.shape[2]) @ mlp.weights[l]
+                       + (mlp.biases[l].astype(np.int64) << FRAC))
+                a = _act_requant_np(acc, mlp.activations[l],
+                                    q).reshape(b_mp + (-1,))
+        return self._score_counts_np(a)
+
+    def _score_counts_np(self, a: np.ndarray) -> np.ndarray:
+        """Correct counts from final activations (B, Mp, n_out)."""
+        n_out = a.shape[2]
+        score = a * n_out + (n_out - 1 - np.arange(n_out, dtype=np.int64))
+        smax = score.max(axis=2)
+        lab_safe = np.maximum(self._labels, 0)
+        slab = np.take_along_axis(
+            score, np.broadcast_to(lab_safe[None, :, None],
+                                   score.shape[:2] + (1,)), axis=2)[..., 0]
+        slab = np.where(self._labels[None, :] < 0, _NEG, slab)
+        return np.sum(slab == smax, axis=1)
+
+    def _counts_np(self, k: int, wi, wj, dw, db) -> np.ndarray:
+        """int64 numpy backend: same column / rank-1 / score-trick algebra."""
+        mlp = self._mlp
+        q = mlp.q
+        n_layers = len(mlp.weights)
+        acc_col = (self._acc[k][:, wj] + self._a[k][:, wi] * dw[None, :]
+                   + db[None, :])                                 # (Mp, B)
+        new_col = _act_requant_np(acc_col, mlp.activations[k], q)
+        n_out = self._a[-1].shape[1]
+        if k == n_layers - 1:
+            new_score = new_col * n_out + (n_out - 1 - wj)[None, :]
+            smax = np.maximum(self._maxexc[:, wj], new_score)
+            slab = np.where(self._labels[:, None] == wj[None, :],
+                            new_score, self._slab[:, None])
+            return np.sum(slab == smax, axis=0)
+        dcol = new_col - self._a[k + 1][:, wj]                    # (Mp, B)
+        w_next = mlp.weights[k + 1]
+        acc = (self._acc[k + 1][None, :, :]
+               + dcol.T[:, :, None] * w_next[wj][:, None, :])     # (B, Mp, n)
+        a = _act_requant_np(acc, mlp.activations[k + 1], q)
+        for l in range(k + 2, n_layers):
+            b_mp = a.shape[:2]
+            acc = (a.reshape(-1, a.shape[2]) @ mlp.weights[l]
+                   + (mlp.biases[l].astype(np.int64) << FRAC))
+            a = _act_requant_np(acc, mlp.activations[l],
+                                q).reshape(b_mp + (-1,))
+        return self._score_counts_np(a)
+
+    # -- jax backend (built lazily; lives in jaxtail.py) -------------------
+
+    def _jax_state(self):
+        if self._jax is None:
+            from . import jaxtail
+            self._jax = jaxtail.JaxState(self)
+        return self._jax
+
+    def _sync_device(self, changed: Optional[dict]) -> None:
+        if self._jax is not None:
+            self._jax.sync(changed)
+
+    def _jax_counts(self, k, pad_to, wi, wj, dw, db,
+                    kind: str = "indep") -> np.ndarray:
+        return self._jax_state().counts(k, pad_to, wi, wj, dw, db, kind)

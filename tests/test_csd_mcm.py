@@ -1,6 +1,8 @@
 """Properties of the CSD arithmetic and shift-add synthesis (paper II-B, V)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import csd, mcm

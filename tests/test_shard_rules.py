@@ -10,8 +10,8 @@ from repro import shard
 from repro.launch.specs import cache_struct, input_specs, param_structs
 from repro.nn.types import SHAPES, applicable_shapes, get_config, list_configs
 
-MESHES = [AbstractMesh((16, 16), ("data", "model")),
-          AbstractMesh((2, 16, 16), ("pod", "data", "model"))]
+MESHES = [AbstractMesh((("data", 16), ("model", 16))),
+          AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))]
 
 
 def _axis_size(mesh, axis):
