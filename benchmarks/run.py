@@ -7,7 +7,14 @@ benchmarks read the dry-run ledger and time the Pallas kernels (interpret
 mode on CPU — correctness-representative, not TPU wall-clock; the roofline
 section is the TPU performance statement).
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--only substring] [--skip-paper]
+The ``tuning`` and ``sweep`` sections are the batched-engine statements
+(DESIGN.md 7 and 10): serial seed path vs batched engine with identical
+decisions asserted, wall-clock speedups reported.  ``--smoke`` shrinks the
+``sweep`` section (fewer epochs/reps, validation split only) so CI can
+exercise sweep parity on every push:
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--only substring]
+          [--skip-paper] [--smoke]
 """
 from __future__ import annotations
 
@@ -16,6 +23,9 @@ import json
 import os
 import sys
 import time
+
+# --smoke: shrink the sweep section to a CI-sized parity check
+SMOKE = False
 
 
 def bench_kernels():
@@ -87,6 +97,118 @@ def bench_tuning():
                      f"identical_decisions=yes;"
                      f"cands={tb.stats['candidates']};"
                      f"eval_calls={tb.stats['eval_calls']}"))
+    return rows
+
+
+def bench_sweep():
+    """Tentpole benchmark: the hardware-accuracy *sweeps* (DESIGN.md 10) —
+    the Section IV-A min-q search, the time-multiplexed tuner's chain-scan
+    decision tree, and the LM min-bitwidth ladder — serial per-candidate
+    scoring (seed path) vs the batched sweep engine.  Identical decisions
+    are asserted for every pair; wall-clock speedups reported.  ``--smoke``
+    keeps only the quick parity rows (CI mode)."""
+    import numpy as np
+    from repro.core import find_min_q, quantize_inputs
+    from repro.core.tuning import tune_time_multiplexed
+    from repro.data import pendigits
+    from repro.eval import QSweepEvaluator
+    from repro.train.zaal import TrainConfig, train
+
+    reps = 2 if SMOKE else 5
+    ds = pendigits.load()
+    (xtr, ytr), (xval, yval) = ds.validation_split()
+    x_val = quantize_inputs(pendigits.to_unit(xval))
+    cfg = TrainConfig(structure=(16, 16, 10), epochs=5 if SMOKE else 25,
+                      seed=3)
+    res = train(cfg, pendigits.to_unit(xtr), ytr,
+                pendigits.to_unit(xval), yval)
+    acts = ("htanh", "htanh", "hsig")
+    rows = []
+
+    # -- paper IV-A min-q search: serial per-q forwards vs stacked batches
+    sizes = [(f"val{x_val.shape[0]}", x_val, yval)]
+    if not SMOKE:
+        sizes.append((f"val{4 * x_val.shape[0]}",
+                      np.concatenate([x_val] * 4), np.concatenate([yval] * 4)))
+    for name, xv, yv in sizes:
+        qs = find_min_q(res.weights, res.biases, acts, xv, yv,
+                        engine="serial")
+        t0 = time.time()
+        for _ in range(reps):
+            qs = find_min_q(res.weights, res.biases, acts, xv, yv,
+                            engine="serial")
+        t_serial = (time.time() - t0) / reps
+        ev = QSweepEvaluator(xv, yv)          # shared rows + jitted forwards,
+        qb = find_min_q(res.weights, res.biases, acts, xv, yv,  # warm
+                        evaluator=ev)
+        t0 = time.time()
+        for _ in range(reps):
+            qb = find_min_q(res.weights, res.biases, acts, xv, yv,
+                            evaluator=ev)
+        t_batched = (time.time() - t0) / reps
+        assert (qs.q, qs.ha, qs.history) == (qb.q, qb.ha, qb.history), \
+            "min-q decision mismatch!"
+        rows.append((f"sweep/find_min_q/16-16-10/{name}", t_batched * 1e6,
+                     f"serial_s={t_serial:.4f};batched_s={t_batched:.4f};"
+                     f"speedup={t_serial / t_batched:.2f}x;"
+                     f"identical_decisions=yes;q={qb.q};"
+                     f"levels={len(qb.history)}"))
+
+    # -- paper IV-C tuner: the chain scan must win at every validation size
+    qr = find_min_q(res.weights, res.biases, acts, x_val, yval)
+    tm_sizes = [("val562", x_val[:562], yval[:562])]
+    if not SMOKE:
+        tm_sizes.append((f"val{x_val.shape[0]}", x_val, yval))
+    for name, xv, yv in tm_sizes:
+        t0 = time.time()
+        ts = tune_time_multiplexed(qr.mlp, xv, yv, scope="neuron",
+                                   max_sweeps=2, engine="serial")
+        t_serial = time.time() - t0
+        t0 = time.time()
+        tb = tune_time_multiplexed(qr.mlp, xv, yv, scope="neuron",
+                                   max_sweeps=2, engine="batched")
+        t_batched = time.time() - t0
+        assert ts.bha == tb.bha and ts.log == tb.log, "TM decision mismatch!"
+        rows.append((f"sweep/tune_tm_chain/16-16-10/{name}", t_batched * 1e6,
+                     f"serial_s={t_serial:.3f};batched_s={t_batched:.3f};"
+                     f"speedup={t_serial / t_batched:.2f}x;"
+                     f"identical_decisions=yes;"
+                     f"cands={tb.stats['candidates']};"
+                     f"eval_calls={tb.stats['eval_calls']}"))
+
+    # -- LM min-bitwidth ladder: quantize once, one stacked eval dispatch
+    if not SMOKE:
+        import dataclasses
+        import jax
+        from repro.nn import Model, get_config
+        from repro.quant import min_bitwidth_search
+        lm_cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                                     n_layers=2, vocab=256, remat=False)
+        m = Model(lm_cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                  lm_cfg.vocab)
+        batch = {"tokens": toks, "labels": toks}
+
+        def ev_fn(p):
+            return m.loss(p, batch)[0]
+
+        _, bits_s, hist_s = min_bitwidth_search(params, ev_fn, budget=0.05,
+                                                engine="serial")
+        t0 = time.time()
+        _, bits_s, hist_s = min_bitwidth_search(params, ev_fn, budget=0.05,
+                                                engine="serial")
+        t_serial = time.time() - t0
+        _, bits_b, hist_b = min_bitwidth_search(params, ev_fn, budget=0.05)
+        t0 = time.time()
+        _, bits_b, hist_b = min_bitwidth_search(params, ev_fn, budget=0.05)
+        t_batched = time.time() - t0
+        assert (bits_s, hist_s) == (bits_b, hist_b), "ladder mismatch!"
+        rows.append(("sweep/min_bitwidth/qwen2-0.5b-r", t_batched * 1e6,
+                     f"serial_s={t_serial:.3f};batched_s={t_batched:.3f};"
+                     f"speedup={t_serial / t_batched:.2f}x;"
+                     f"identical_decisions=yes;bits={bits_b};"
+                     f"rungs={len(hist_b) - 1}"))
     return rows
 
 
@@ -174,6 +296,7 @@ def bench_ptq_decode():
 
 SECTIONS = {
     "tuning": bench_tuning,
+    "sweep": bench_sweep,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
     "serving": bench_serving,
@@ -193,7 +316,12 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--skip-paper", action="store_true",
                     help="skip the (training-heavy) paper tables")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep section: fewer epochs/reps, "
+                         "parity still asserted")
     args = ap.parse_args(argv)
+    global SMOKE
+    SMOKE = args.smoke
     sections = dict(SECTIONS)
     if not args.skip_paper:
         sections.update(paper_sections())

@@ -1,12 +1,32 @@
-"""Shift-add synthesis explorer: reproduce the paper's Fig. 3 walk-through
-and sweep CMVM sizes, comparing DBR vs CSE adder counts.
+"""Shift-add synthesis explorer — multiplierless costs, end to end.
+
+What this example demonstrates, step by step:
+
+1. **Paper Fig. 3 walk-through**: the 2x2 CMVM block ``y1 = 11x1 + 3x2,
+   y2 = 5x1 + 13x2`` — CSD digits per coefficient, the DBR adder count
+   [23], and greedy common-subexpression extraction (DESIGN.md 8.3: greedy
+   CSE, not the exact CP of [18]), checked by evaluating the synthesized
+   adder graph on a concrete input.
+2. **CMVM sweep**: random coefficient matrices of growing size, showing the
+   paper's Section V point that sharing wins grow with matrix size.
+3. **Min-q trajectory sweep**: ties the synthesis explorer to the
+   quantization front end — a quick-trained pendigits net is swept through
+   the Section IV-A minimum-quantization search on the batched multi-q
+   engine (``find_min_q``, DESIGN.md 10), and each visited q level's first
+   layer is synthesized as a CMVM block.  Coarser grids (smaller q) mean
+   fewer nonzero CSD digits and fewer adders; the search's chosen q is the
+   smallest that holds accuracy — the hardware-cost/accuracy trade the
+   paper's flow automates.
 
 Run:  PYTHONPATH=src python examples/multiplierless_report.py
 """
 import numpy as np
 
-from repro.core import mcm
-from repro.core.csd import nnz, to_csd
+from repro.core import find_min_q, mcm, quantize_inputs
+from repro.core.csd import nnz, tnzd, to_csd
+from repro.core.quantize import quantize_mlp
+from repro.data import pendigits
+from repro.train.zaal import TrainConfig, train
 
 
 def main():
@@ -31,6 +51,24 @@ def main():
         dbr = mcm.dbr_adder_count(M)
         cse = mcm.synthesize(M, "cse").n_adders
         print(f"   {m:3d}x{n:<4d} {dbr:6d} {cse:6d} {100*(1-cse/dbr):7.1f}%")
+
+    print("== min-q trajectory: adder cost along the IV-A sweep ==")
+    ds = pendigits.load()
+    (xtr, ytr), (xval, yval) = ds.validation_split()
+    cfg = TrainConfig(structure=(16, 10), epochs=8)
+    res = train(cfg, pendigits.to_unit(xtr), ytr,
+                pendigits.to_unit(xval), yval)
+    xval_int = quantize_inputs(pendigits.to_unit(xval))
+    qr = find_min_q(res.weights, res.biases, ("htanh", "hsig"),
+                    xval_int, yval)          # batched sweep engine (default)
+    print(f"   {'q':>4s} {'ha%':>7s} {'tnzd':>6s} {'CSE adders':>11s}"
+          f"   (layer-1 CMVM)")
+    for q, ha in qr.history:
+        mlp_q = quantize_mlp(res.weights, res.biases, ("htanh", "hsig"), q)
+        adders = mcm.synthesize(mlp_q.weights[0].T, "cse").n_adders
+        t = tnzd(mlp_q.weights + mlp_q.biases)
+        chosen = "  <- chosen" if q == qr.q else ""
+        print(f"   {q:4d} {ha:7.2f} {t:6d} {adders:11d}{chosen}")
 
 
 if __name__ == "__main__":

@@ -1,20 +1,31 @@
-"""Quickstart: the paper's full pipeline on one MLP, in ~a minute.
+"""Quickstart: the paper's full pipeline on one MLP, end to end, in ~a minute.
 
-Train a 16-10-10 ANN on the pendigits surrogate with ZAAL, find the minimum
-quantization value (Section IV-A), tune the integer weights for the parallel
-architecture (IV-B), compare design costs across the three architectures
-(Section III) and the multiplierless styles (Section V), and let SIMURG emit
-the Verilog (Section VI).
+What this example demonstrates, step by step:
+
+1. **Train** a float 16-10-10 ANN on the pendigits surrogate with the ZAAL
+   trainer (DESIGN.md 6 — surrogate data, so treat accuracies relatively).
+2. **Quantize** with the Section IV-A minimum-quantization search on the
+   batched multi-q sweep engine (`find_min_q`, DESIGN.md 10): all candidate
+   q levels of a block are quantized once and scored in one stacked integer
+   forward, with stopping decisions bit-identical to ``engine="serial"``.
+   The same `QSweepEvaluator` then scores the test split.
+3. **Tune** the integer weights for the parallel architecture (IV-B) and
+   the time-multiplexed one (IV-C) on the batched mutation engine — chain
+   scans decide whole candidate runs with serial-identical greedy decisions
+   (DESIGN.md 7.5).
+4. **Price** the three design architectures (Section III) and the
+   multiplierless styles (Section V) with the analytic cost models.
+5. **Emit hardware**: SIMURG writes Verilog + testbench + synthesis script
+   (Section VI).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
 from repro.core import (find_min_q, quantize_inputs, simurg, tune_parallel,
-                        tune_time_multiplexed, hardware_accuracy)
+                        tune_time_multiplexed)
 from repro.core.archs import design_cost
 from repro.core.csd import tnzd
 from repro.data import pendigits
+from repro.eval import QSweepEvaluator
 from repro.train.zaal import TrainConfig, train
 
 
@@ -27,33 +38,44 @@ def main():
                 pendigits.to_unit(xval), yval)
     print(f"   float: train={res.train_acc:.1f}% val={res.val_acc:.1f}%")
 
-    print("== 2. minimum quantization value (paper IV-A) ==")
+    print("== 2. minimum quantization value (paper IV-A, batched sweep) ==")
     hw_acts = ("htanh", "htanh", "hsig")
     xval_int = quantize_inputs(pendigits.to_unit(xval))
     xte_int = quantize_inputs(pendigits.to_unit(ds.x_test))
-    qr = find_min_q(res.weights, res.biases, hw_acts, xval_int, yval)
+    # the sweep engine scores a whole block of candidate q levels in one
+    # stacked forward (DESIGN.md 10); engine="serial" is the one-forward-
+    # per-q reference with identical (q, ha, history)
+    import time
+    sweep_ev = QSweepEvaluator(xval_int, yval)
+    t0 = time.time()
+    qr = find_min_q(res.weights, res.biases, hw_acts, xval_int, yval,
+                    evaluator=sweep_ev)
+    dt_q = time.time() - t0
     print(f"   q={qr.q}  hw-val-acc={qr.ha:.2f}%  "
           f"history={[(q, round(h,1)) for q, h in qr.history]}")
+    test_ev = QSweepEvaluator(xte_int, ds.y_test)   # shared by steps 2-3
     print(f"   tnzd={tnzd(qr.mlp.weights + qr.mlp.biases)}  "
-          f"hw-test-acc={hardware_accuracy(qr.mlp, xte_int, ds.y_test):.2f}%")
+          f"hw-test-acc={test_ev.evaluate([qr.mlp])[0]:.2f}%  "
+          f"[sweep: {len(qr.history)} levels in {dt_q*1e3:.1f} ms, "
+          f"{sweep_ev.stats['eval_calls']} evaluator calls]")
 
     print("== 3. post-training weight tuning (paper IV-B/IV-C) ==")
     # both tuners run on the batched hardware-accuracy engine (repro.eval)
-    # by default — identical decisions to engine="serial", much faster
-    import time
+    # by default — chain scans, identical decisions to engine="serial"
     t0 = time.time()
     tp = tune_parallel(qr.mlp, xval_int, yval, max_sweeps=4)
     dt = time.time() - t0
     print(f"   parallel: bha={tp.bha:.2f}% repl={tp.replacements} "
           f"tnzd={tnzd(tp.mlp.weights + tp.mlp.biases)} "
-          f"hw-test={hardware_accuracy(tp.mlp, xte_int, ds.y_test):.2f}%")
+          f"hw-test={test_ev.evaluate([tp.mlp])[0]:.2f}%")
     print(f"   [batched engine: {dt:.2f}s, "
           f"{tp.stats['candidates']} candidates in "
           f"{tp.stats['eval_calls']} evaluator calls, "
           f"backend={tp.stats['backend']}]")
     tm = tune_time_multiplexed(qr.mlp, xval_int, yval, scope="neuron",
                                max_sweeps=2)
-    print(f"   smac_neuron: bha={tm.bha:.2f}% repl={tm.replacements}")
+    print(f"   smac_neuron: bha={tm.bha:.2f}% repl={tm.replacements} "
+          f"[tm chain: {tm.stats['eval_calls']} evaluator calls]")
 
     print("== 4. design-architecture costs (paper III + V) ==")
     for arch, mlp, styles in [("parallel", tp.mlp,

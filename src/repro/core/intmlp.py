@@ -49,7 +49,7 @@ class IntMLP:
         return [self.weights[0].shape[0]] + [w.shape[1] for w in self.weights]
 
 
-def act_requant(acc, act: str, q: int, xp=np):
+def act_requant(acc, act: str, q, xp=np):
     """Hardware activation + 8-bit requantization on an accumulator at scale
     2^(q+FRAC) — the single source of the activation contract.
 
@@ -62,8 +62,16 @@ def act_requant(acc, act: str, q: int, xp=np):
       ``xp=jax.numpy``, on traced jnp arrays — this is what keeps every
       evaluation backend in ``repro.eval`` bit-exact against
       :func:`forward_int`.
+    * ``q`` may also be an integer *array* broadcastable against ``acc``
+      (shape ``(Q, 1, 1)`` in the multi-q sweep mode, DESIGN.md 10): every
+      stacked network then requantizes with its own shift, same arithmetic.
     """
-    one = acc.dtype.type(1 << (q + FRAC))
+    if isinstance(q, (int, np.integer)):
+        one = acc.dtype.type(1 << (int(q) + FRAC))
+        shift = int(q)
+    else:  # per-network q levels of a stacked sweep batch
+        shift = xp.asarray(q).astype(acc.dtype)
+        one = xp.asarray(1, dtype=acc.dtype) << (shift + FRAC)
     if act == "htanh":
         acc = xp.clip(acc, -one, one)
     elif act in ("satlin", "relu"):
@@ -72,7 +80,7 @@ def act_requant(acc, act: str, q: int, xp=np):
         acc = xp.clip((acc >> 1) + (one >> 1), 0, one)
     elif act != "lin":
         raise ValueError(f"unknown hardware activation {act!r}")
-    return xp.clip(acc >> q, ACT_MIN, ACT_MAX)
+    return xp.clip(acc >> shift, ACT_MIN, ACT_MAX)
 
 
 def forward_int(mlp: IntMLP, x_int: np.ndarray, return_acc: bool = False) -> np.ndarray:

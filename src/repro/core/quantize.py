@@ -10,6 +10,13 @@ whenever the 1-bit network scores 0%; the evident intent is to keep growing q
 while the network is still useless OR still improving, so we continue while
 ``ha(q) <= chance`` or the improvement exceeds the 0.1% budget, capped at
 ``q_max``.
+
+Engines (DESIGN.md 10): ``engine="batched"`` (the default) quantizes a block
+of candidate q levels once and scores them in one stacked integer forward on
+the multi-q sweep evaluator (``repro.eval.QSweepEvaluator``), then applies
+the stopping rule serially over the exact per-q accuracies — the returned
+``(q, ha, history)`` is bit-identical to ``engine="serial"``, the original
+one-forward-per-q reference loop.
 """
 from __future__ import annotations
 
@@ -46,8 +53,57 @@ class QuantResult:
 
 def find_min_q(weights, biases, activations, x_val_int: np.ndarray,
                y_val: np.ndarray, *, budget_pct: float = 0.1,
-               q_max: int = 16, chance_pct: float = 0.0) -> QuantResult:
-    """Paper Section IV-A, steps 1-6."""
+               q_max: int = 16, chance_pct: float = 0.0,
+               engine: str = "batched", backend: str = "auto",
+               block: int = 4, shard: bool = False,
+               evaluator=None) -> QuantResult:
+    """Paper Section IV-A, steps 1-6.
+
+    ``engine="batched"`` scores ``block`` candidate q levels per stacked
+    evaluator call with the stopping decisions bit-identical to the serial
+    loop (DESIGN.md 10); ``engine="serial"`` is the original reference path.
+    Pass ``evaluator`` (a ``repro.eval.QSweepEvaluator`` built on the same
+    validation split) to share its padded rows and jitted forwards across
+    many searches — the paper-table pipeline's pattern.  A passed evaluator
+    carries its own configuration, so it takes precedence over the
+    ``backend``/``shard``/``block`` arguments (blocks follow its ``qchunk``
+    to keep device batches pad-free).
+    """
+    if engine == "serial":
+        return _find_min_q_serial(weights, biases, activations, x_val_int,
+                                  y_val, budget_pct=budget_pct, q_max=q_max,
+                                  chance_pct=chance_pct)
+    if engine != "batched":
+        raise ValueError(engine)
+    if evaluator is None:
+        from repro.eval import QSweepEvaluator
+        evaluator = QSweepEvaluator(x_val_int, y_val, backend=backend,
+                                    shard=shard, qchunk=block)
+    else:
+        block = evaluator.qchunk
+    history = []
+    prev_ha = 0.0
+    q = 0
+    best = None
+    while q < q_max:
+        qs = list(range(q + 1, min(q + block, q_max) + 1))     # step 2 block
+        mlps = [quantize_mlp(weights, biases, activations, qq)  # step 3, once
+                for qq in qs]
+        has = evaluator.evaluate(mlps)                          # step 4 batch
+        for qq, mlp, ha in zip(qs, mlps, has):
+            history.append((qq, ha))
+            best = QuantResult(q=qq, mlp=mlp, ha=ha, history=history)
+            if ha > chance_pct and ha - prev_ha <= budget_pct:  # steps 5-6
+                return best
+            prev_ha = ha
+        q = qs[-1]
+    return best
+
+
+def _find_min_q_serial(weights, biases, activations, x_val_int, y_val, *,
+                       budget_pct: float, q_max: int,
+                       chance_pct: float) -> QuantResult:
+    """The seed's one-forward-per-q loop — the sweep engine's reference."""
     history = []
     prev_ha = 0.0
     q = 0

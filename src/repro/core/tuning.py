@@ -12,13 +12,16 @@ the validation split:
   bias-nudging fallback (+-4) when a candidate alone loses accuracy.
 
 Both run on the batched hardware-accuracy engine (``repro.eval``, DESIGN.md 7)
-by default: candidate mutations are proposed in chunks, scored in one jitted
-integer forward each, and committed with the *first-acceptor* scan — the first
-candidate (in serial visit order) whose accuracy clears the greedy threshold
-is committed and everything scored after it against the stale network is
-re-proposed.  Every accept/reject decision therefore reproduces the serial
-hill-climb exactly; ``engine="serial"`` keeps the original per-candidate
-numpy loop (the regression baseline and benchmark reference).
+by default, and both decide whole candidate runs with *chain scans*
+(DESIGN.md 7.5): ``tune_parallel`` follows the serial accept/reject chain
+through each chunk with ``evaluate_chain``; ``tune_time_multiplexed`` follows
+its candidate-pair + bias-nudge decision tree with ``evaluate_tm_chain`` —
+each candidate is scored against the state with every earlier accept applied,
+so one evaluator pass plus one ``commit_many`` cache refresh replaces the
+per-candidate forward/commit cycle at every validation size.  Every
+accept/reject decision reproduces the serial hill-climb exactly;
+``engine="serial"`` keeps the original per-candidate numpy loop (the
+regression baseline and benchmark reference).
 """
 from __future__ import annotations
 
@@ -30,10 +33,6 @@ from . import csd
 from .intmlp import IntMLP, hardware_accuracy
 
 __all__ = ["tune_parallel", "tune_time_multiplexed", "TuneResult", "sls_of"]
-
-# Lower bound on the time-multiplexed tuner's weight-chunk sizing (matches
-# the evaluator's small jit size, so padded bias-nudge batches stay cheap).
-_SMALL = 16
 
 
 @dataclass
@@ -223,67 +222,53 @@ def tune_time_multiplexed(mlp: IntMLP, x_val_int: np.ndarray,
                           engine: str = "batched", backend: str = "auto",
                           chunk: int = 128, shard: bool = False) -> TuneResult:
     """Greedy smallest-left-shift maximization (paper IV-C) with bias
-    nudging.  Decision-identical engines as in :func:`tune_parallel`."""
+    nudging.  Decision-identical engines as in :func:`tune_parallel`;
+    ``engine="batched"`` decides each weight group's candidate-pair +
+    bias-nudge tree in one ``evaluate_tm_chain`` pass (DESIGN.md 7.5)."""
     if engine == "serial":
         return _tune_tm_serial(mlp, x_val_int, y_val, scope=scope,
                                bias_range=bias_range, max_sweeps=max_sweeps)
     if engine != "batched":
         raise ValueError(engine)
-    from repro.eval import Candidate
+    from repro.eval import Candidate, TMStep
     ev = _batched_ev(mlp, x_val_int, y_val, backend, chunk, shard)
     bha = ev.accuracy()                              # step 1
     initial = bha
     replaced_total = 0
     sweeps = 0
     log = []
-    dbs = [db for db in range(-bias_range, bias_range + 1) if db != 0]
+    dbs = tuple(db for db in range(-bias_range, bias_range + 1) if db != 0)
     while sweeps < max_sweeps:                       # step 3 loop
         sweeps += 1
         improved_any = False
         for group in _neuron_groups(ev.mlp, scope):
             wcands = _sls_candidates(ev.mlp, group)
+            # Chain scan (DESIGN.md 7.5): one evaluator pass decides the
+            # whole group's candidate-pair + bias-nudge tree (steps 2b-2d),
+            # each weight scored against the state with every earlier accept
+            # applied, then one commit_many cache refresh per run.  Runs are
+            # truncated at layer boundaries (scope='ann' groups span layers;
+            # evaluator batches must share a layer).
             pos = 0
-            # Weights per phase-1 chunk; each weight holds <= 2 pw candidates.
-            n_weights = max(_SMALL, ev.chunk) // 2
             while pos < len(wcands):
-                chunk_w = wcands[pos:pos + n_weights]
-                # evaluator batches must share a layer: truncate the chunk at
-                # the first layer boundary (scope='ann' groups span layers)
-                k0 = chunk_w[0][0]
-                same = next((i for i, wc in enumerate(chunk_w)
-                             if wc[0] != k0), len(chunk_w))
-                chunk_w = chunk_w[:same]
-                flat = [Candidate(k, m, n, pw)
-                        for (k, m, n, _w, pws) in chunk_w for pw in pws]
-                has = ev.evaluate(flat)
-                committed = False
-                off = 0
-                for j, (k, m, n, _w, pws) in enumerate(chunk_w):
-                    w_has = has[off:off + len(pws)]
-                    off += len(pws)
-                    ranked = sorted(zip(w_has, pws), reverse=True)
-                    ha_best, pw_best = ranked[0]
-                    if ha_best >= bha:               # step 2c
-                        ev.commit(Candidate(k, m, n, pw_best))
-                        bha = ha_best
-                    else:
-                        # step 2d: bias nudging with the best candidate set
-                        b_cands = [Candidate(k, m, n, pw_best, dbias=db)
-                                   for db in dbs]
-                        b_has = ev.evaluate(b_cands)
-                        hit = next((t for t, ha in enumerate(b_has)
-                                    if ha >= bha), None)
-                        if hit is None:
-                            continue                 # revert: nothing committed
-                        ev.commit(b_cands[hit])
-                        bha = b_has[hit]
-                    replaced_total += 1
-                    improved_any = True
-                    committed = True
-                    pos += j + 1                     # rescan after the commit
-                    break
-                if not committed:
-                    pos += len(chunk_w)
+                k0 = wcands[pos][0]
+                same = next((i for i, wc in enumerate(wcands[pos:])
+                             if wc[0] != k0), len(wcands) - pos)
+                run = wcands[pos:pos + same]
+                steps = [TMStep(k, m, n, tuple(pws), dbs)
+                         for (k, m, n, _w, pws) in run]
+                decisions = ev.evaluate_tm_chain(steps, bha)
+                accepted = []
+                for (k, m, n, _w, _pws), (ok, pw, db, ha) in zip(run,
+                                                                 decisions):
+                    if ok:                           # steps 2c/2d accepts
+                        accepted.append(Candidate(k, m, n, pw, dbias=db))
+                        bha = ha
+                        replaced_total += 1
+                        improved_any = True
+                if accepted:
+                    ev.commit_many(accepted)
+                pos += same
         log.append((sweeps, replaced_total, bha))
         if not improved_any:                          # step 4
             break

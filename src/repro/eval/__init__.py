@@ -1,16 +1,26 @@
-"""Batched hardware-accuracy evaluation engine (DESIGN.md 7).
+"""Batched hardware-accuracy evaluation engine (DESIGN.md 7, 10).
 
-The paper's tuning loops (Sections IV-B/IV-C) are greedy hill-climbers that
-re-score *hardware accuracy* after every candidate weight mutation.  This
-package evaluates whole batches of candidate ``IntMLP`` mutations in a single
-jitted integer forward over the validation set — bit-exact against the numpy
-``forward_int`` oracle in ``repro.core.intmlp`` — with layer-prefix activation
-caching (a mutation in layer k only recomputes layers >= k), an int32-safe jax
-backend (Pallas ``csd_matvec`` tail on TPU, pure-jnp elsewhere), an int64
-numpy fallback, and optional ``shard_map`` data-parallel sharding of the
-validation batch.
+The paper's hardware-accuracy consumers are greedy searches that re-score the
+integer network after every candidate move.  This package scores whole
+batches of candidates in single jitted integer forwards — bit-exact against
+the numpy ``forward_int`` oracle in ``repro.core.intmlp`` — in two shapes:
+
+* ``BatchedHWEvaluator`` (DESIGN.md 7): batches of single-column *mutations*
+  of one committed network, with layer-prefix activation caching, the exact
+  greedy batch shapes (independent / prefix / chain), and the
+  time-multiplexed candidate-pair + bias-nudge chain scan
+  (``evaluate_tm_chain``).  Drives both weight tuners (paper IV-B/IV-C).
+* ``QSweepEvaluator`` (DESIGN.md 10): batches of whole networks sharing one
+  structure — the multi-q sweep mode.  Drives the Section IV-A minimum-
+  quantization search and the paper-table pipeline; ``quant/ptq.py`` applies
+  the same quantize-once / score-as-a-batch pattern at LM scale.
+
+Both offer an int32-safe jax backend (auto-demoting to int64 numpy) and
+optional ``shard_map`` data-parallel sharding of the validation rows.
 """
-from .batched import (BatchedHWEvaluator, Candidate, ha_pct,  # noqa: F401
-                      int32_safe_bound)
+from .batched import (BatchedHWEvaluator, Candidate,  # noqa: F401
+                      QSweepEvaluator, TMStep, ha_pct, int32_safe_bound,
+                      net_int32_safe)
 
-__all__ = ["BatchedHWEvaluator", "Candidate", "ha_pct", "int32_safe_bound"]
+__all__ = ["BatchedHWEvaluator", "Candidate", "QSweepEvaluator", "TMStep",
+           "ha_pct", "int32_safe_bound", "net_int32_safe"]

@@ -28,18 +28,34 @@ Backends
 ``shard=True`` shards the validation batch across devices with ``shard_map``
 (counts are psum-reduced); rows are padded with label -1 which can never win
 the score comparison.
+
+Two evaluators live here:
+
+* :class:`BatchedHWEvaluator` — the tuners' stateful engine: ONE committed
+  network, batches of single-column *mutations* of it (DESIGN.md 7).  Its
+  :meth:`~BatchedHWEvaluator.evaluate_tm_chain` runs the time-multiplexed
+  tuner's candidate-pair + bias-nudge decision tree as a chain scan
+  (DESIGN.md 7.5).
+* :class:`QSweepEvaluator` — the sweep engine: batches of *whole networks*
+  sharing one (structure, activations), e.g. the same float weights
+  quantized at several candidate q levels, scored in one stacked integer
+  forward (the multi-q sweep mode, DESIGN.md 10).  The Section IV-A min-q
+  search, the paper-table pipeline, and the LM min-bitwidth search pattern
+  all drive their sweeps through it.
 """
 from __future__ import annotations
 
+import math
 import warnings
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.intmlp import FRAC, IntMLP, act_requant
+from repro.core.intmlp import ACT_MAX, FRAC, IntMLP, act_requant
 
-__all__ = ["Candidate", "BatchedHWEvaluator", "ha_pct", "int32_safe_bound"]
+__all__ = ["Candidate", "BatchedHWEvaluator", "QSweepEvaluator", "TMStep",
+           "ha_pct", "int32_safe_bound", "net_int32_safe"]
 
 _NEG = -(1 << 30)      # impossible score: marks padded rows as never-correct
 _SMALL_CHUNK = 16      # secondary jit size for commit-heavy scan phases
@@ -69,6 +85,22 @@ class Candidate:
     dbias: int = 0
 
 
+@dataclass(frozen=True)
+class TMStep:
+    """One weight's slot in the time-multiplexed tuner's decision tree
+    (paper IV-C steps 2b-2d; DESIGN.md 7.5): the candidate replacement values
+    ``pws`` for weight [row, col] of ``layer`` are *alternatives* — ranked by
+    ``(accuracy, value)`` descending, the best committed iff it clears the
+    running threshold — and on failure the bias nudges ``dbs`` are tried in
+    order with the best candidate value, first hit committed."""
+
+    layer: int
+    col: int
+    row: int
+    pws: tuple      # 1-2 candidate replacement values (grid endpoints)
+    dbs: tuple = () # bias nudge deltas in serial try order
+
+
 def int32_safe_bound(mlp: IntMLP, slack_mult: int = 4,
                      bias_slack: int = 16) -> bool:
     """True when every layer's worst-case |accumulator| — including a mutated
@@ -87,8 +119,96 @@ def int32_safe_bound(mlp: IntMLP, slack_mult: int = 4,
     return True
 
 
+def _layer_accum_bound(w, b) -> int:
+    """Worst-case |accumulator| of one layer *as is* (no mutation slack):
+    ``sum_col |W| * amax + |b| << FRAC``.  Every partial sum of the layer
+    matmul is bounded by it (a sum of absolute values), so it also bounds
+    the intermediates of reordered/blocked summation."""
+    amax = 1 << FRAC
+    w = np.abs(np.asarray(w, dtype=np.int64))
+    col_sum = int(w.sum(axis=0).max()) if w.size else 0
+    bmax = int(np.abs(np.asarray(b, dtype=np.int64)).max()) if b.size else 0
+    return col_sum * amax + (bmax << FRAC)
+
+
+def net_accum_bound(mlp: IntMLP) -> int:
+    """Mutation-free worst-case |accumulator| of the network: the max of
+    ``_layer_accum_bound`` over layers — the quantity every sweep-mode
+    exactness guard compares (DESIGN.md 10)."""
+    return max(_layer_accum_bound(w, b)
+               for w, b in zip(mlp.weights, mlp.biases))
+
+
+def net_int32_safe(mlp: IntMLP) -> bool:
+    """Per-q-level demotion bound of the sweep mode (DESIGN.md 10): sweep
+    batches carry no candidate mutations, so no slack terms apply — networks
+    past the int32 bound are scored on the host path while the rest of the
+    batch stays on device."""
+    return net_accum_bound(mlp) < 2 ** 31
+
+
+# float integer-exactness limits: every product and (blocked/FMA) partial
+# sum of the BLAS sweep path is an integer below the mantissa capacity,
+# hence exact.  The f32 tier additionally needs q + FRAC < 24 so the hsig
+# offset 2^(q+FRAC-1) stays representable next to the accumulator.
+_F64_EXACT = 1 << 53
+_F32_EXACT = 1 << 24
+
+
+def _float_requant_inplace(acc: np.ndarray, act: str, inv) -> None:
+    """Float twin of ``act_requant`` for integer-valued accumulators within
+    the dtype's exact-integer range (the BLAS sweep path, DESIGN.md 10) —
+    in place on float32/float64 ``acc``; ``inv`` is the exact scale ``2^-q``
+    (a scalar, or ``(Q, 1, 1)`` for a per-network stacked batch).
+
+    Arithmetic shifts become multiply-by-``2^-q`` + ``floor`` (floor equals
+    the arithmetic shift for negatives, and a power-of-two multiply only
+    moves the exponent, so both are exact); the pre-clamp at ``±2^(q+FRAC)``
+    folds into the final 8-bit clip because its bounds are integer multiples
+    of ``2^q`` — which also makes ``htanh`` and ``lin`` coincide here, as
+    they do after the int shift+clip.  ``hsig`` keeps its extra
+    ``floor(acc/2)`` half-step, then lands at offset ``+64`` on the common
+    scale.  The clip bounds stay *scalars* on the common scale, so the whole
+    requant is a handful of vectorized passes even for mixed-q stacks.
+    Every intermediate is exactly representable, so results match
+    ``act_requant`` bit for bit (asserted by the sweep parity tests).
+    """
+    dt = acc.dtype.type
+    if act == "hsig":
+        acc *= dt(0.5)
+        np.floor(acc, out=acc)
+        acc *= inv
+        acc += dt(1 << (FRAC - 1))
+        lo = dt(0.0)
+    elif act in ("satlin", "relu"):
+        acc *= inv
+        lo = dt(0.0)
+    elif act in ("htanh", "lin"):
+        acc *= inv
+        lo = dt(-(1 << FRAC))
+    else:
+        raise ValueError(f"unknown hardware activation {act!r}")
+    np.floor(acc, out=acc)
+    np.clip(acc, lo, dt(ACT_MAX), out=acc)
+
+
 # the single activation-contract helper from the oracle module
 _act_requant_np = act_requant
+
+
+def _stacked_score_counts(a: np.ndarray, labels: np.ndarray) -> np.ndarray:
+    """Correct counts from stacked final activations (B, Mp, n_out): the
+    unique-score argmax trick of DESIGN.md 7.2, batch over axis 0.  Padded
+    rows (label -1) can never score correct."""
+    n_out = a.shape[2]
+    score = a * n_out + (n_out - 1 - np.arange(n_out, dtype=np.int64))
+    smax = score.max(axis=2)
+    lab_safe = np.maximum(labels, 0)
+    slab = np.take_along_axis(
+        score, np.broadcast_to(lab_safe[None, :, None],
+                               score.shape[:2] + (1,)), axis=2)[..., 0]
+    slab = np.where(labels[None, :] < 0, _NEG, slab)
+    return np.sum(slab == smax, axis=1)
 
 
 class BatchedHWEvaluator:
@@ -325,6 +445,146 @@ class BatchedHWEvaluator:
             flags[t] = ok
         return counts, flags
 
+    def evaluate_tm_chain(self, steps: Sequence[TMStep],
+                          bha: float) -> list[tuple[bool, int, int, float]]:
+        """Follow the time-multiplexed tuner's per-weight decision tree
+        through ``steps`` in one sparsity-aware host pass (DESIGN.md 7.5):
+        step t's alternatives are scored against the chain state with every
+        earlier *accepted* step applied, its candidate values are ranked by
+        ``(accuracy, value)`` descending, the best is accepted iff its
+        accuracy clears the running best (``>=``, updating it), and on
+        failure the bias nudges are tried in serial order, first hit
+        accepted — exactly the serial tuner's steps 2b-2d.
+
+        Returns one ``(accepted, value, dbias, accuracy)`` tuple per step
+        (``accuracy`` is the decision's score: the committed accuracy when
+        accepted, the best rejected candidate's otherwise).  Committed state
+        is untouched — commit the accepted steps as ``Candidate``s with
+        :meth:`commit_many`.  Steps must share a layer and target distinct
+        weights; bias nudges always run on the host numpy chain against the
+        maintained caches (they exist on every backend), so no device
+        round-trip happens until the commit.  ``bha`` must equal the
+        committed network's accuracy (the greedy invariant), which reduces
+        every threshold to an exact integer correct-count comparison.
+        """
+        if not steps:
+            return []
+        k = steps[0].layer
+        seen = set()
+        for s in steps:
+            if s.layer != k:
+                raise ValueError("steps must share a layer")
+            if not s.pws:
+                raise ValueError("step needs at least one candidate value")
+            if (s.row, s.col) in seen:
+                raise ValueError("steps must target distinct weights")
+            seen.add((s.row, s.col))
+        if ha_pct(self._count, self.n_val) != bha:
+            raise ValueError("bha must equal the committed network's "
+                             "accuracy (greedy invariant)")
+        decisions, n_evals = self._tm_chain_np(k, steps)
+        self.stats["eval_calls"] += 1
+        self.stats["candidates"] += n_evals
+        return decisions
+
+    def _tm_chain_np(self, k: int, steps: Sequence[TMStep]):
+        """int64/int32 numpy chain over the TM decision tree — the same
+        incremental state and changed-rows sparsity as :meth:`_chain_np`,
+        with up to ``len(pws) + len(dbs)`` alternatives scored per step
+        (nudges only when the candidate pair fails, like the serial tuner)."""
+        mlp = self._mlp
+        q = mlp.q
+        n_layers = len(mlp.weights)
+        last = k == n_layers - 1
+        act_k = mlp.activations[k]
+        w_k = mlp.weights[k]
+        dw_all = np.asarray([int(pw) - int(w_k[s.row, s.col])
+                             for s in steps for pw in s.pws] or [0], np.int64)
+        db_all = np.asarray([db << FRAC for s in steps for db in s.dbs]
+                            or [0], np.int64)
+        dt = np.int32 if self._spec_safe(k, dw_all, db_all) else np.int64
+        a_k = self._a[k].astype(dt)
+        acc_k = self._acc[k].astype(dt)
+        a_k1 = self._a[k + 1].astype(dt)
+        acc_n = None if last else self._acc[k + 1].astype(dt)
+        w_next = None if last else mlp.weights[k + 1].astype(dt)
+        w_deep = [mlp.weights[l].astype(dt) for l in range(k + 2, n_layers)]
+        bsh_deep = [(mlp.biases[l].astype(np.int64) << FRAC).astype(dt)
+                    for l in range(k + 2, n_layers)]
+        correct = self._slab == self._score.max(axis=1)           # (Mp,)
+        cnt = self._count
+        n_out = self._a[-1].shape[1]
+        pen = n_out - 1 - np.arange(n_out, dtype=dt)
+        lab_safe = np.maximum(self._labels, 0)
+        real = self._labels >= 0
+        ar = np.arange(self._mp)
+        n_evals = 0
+
+        def eval_alt(i, j, dw, dbsh):
+            """(count, state-artifacts) of one alternative vs the chain."""
+            nonlocal n_evals
+            n_evals += 1
+            buf = a_k[:, i] * dt(dw) + acc_k[:, j]
+            if dbsh:
+                buf += dt(dbsh)
+            h_new = _act_requant_np(buf, act_k, q)
+            dcol = h_new - a_k1[:, j]
+            idx = np.nonzero(dcol)[0]
+            if len(idx) == 0:
+                return cnt, (buf, h_new, idx, None, None)
+            if last:
+                rows = a_k1[idx]
+                rows[:, j] = h_new[idx]
+                acc_rows = None
+            else:
+                acc_rows = acc_n[idx] + dcol[idx, None] * w_next[j][None]
+                rows = _act_requant_np(acc_rows, mlp.activations[k + 1], q)
+                for li, l in enumerate(range(k + 2, n_layers)):
+                    rows = _act_requant_np(rows @ w_deep[li] + bsh_deep[li],
+                                           mlp.activations[l], q)
+            score = rows * n_out
+            score += pen
+            slab = score[ar[:len(idx)], lab_safe[idx]]
+            corr_rows = (slab == score.max(axis=1)) & real[idx]
+            cnt_c = cnt - int(correct[idx].sum()) + int(corr_rows.sum())
+            return cnt_c, (buf, h_new, idx, acc_rows, corr_rows)
+
+        def apply(j, art):
+            buf, h_new, idx, acc_rows, corr_rows = art
+            acc_k[:, j] = buf
+            a_k1[:, j] = h_new
+            if len(idx):
+                if not last:
+                    acc_n[idx] = acc_rows
+                correct[idx] = corr_rows
+
+        decisions = []
+        for s in steps:
+            i, j = s.row, s.col
+            w0 = int(w_k[i, j])
+            alts = []
+            for pw in s.pws:
+                cnt_c, art = eval_alt(i, j, int(pw) - w0, 0)
+                alts.append((cnt_c, int(pw), art))
+            alts.sort(key=lambda t: (t[0], t[1]), reverse=True)
+            cnt_best, pw_best, art_best = alts[0]
+            if cnt_best >= cnt:                       # step 2c
+                apply(j, art_best)
+                cnt = cnt_best
+                decisions.append((True, pw_best, 0,
+                                  ha_pct(cnt_best, self.n_val)))
+                continue
+            dec = (False, pw_best, 0, ha_pct(cnt_best, self.n_val))
+            for db in s.dbs:                          # step 2d
+                cnt_c, art = eval_alt(i, j, pw_best - w0, int(db) << FRAC)
+                if cnt_c >= cnt:
+                    apply(j, art)
+                    cnt = cnt_c
+                    dec = (True, pw_best, int(db), ha_pct(cnt_c, self.n_val))
+                    break
+            decisions.append(dec)
+        return decisions, n_evals
+
     def commit_many(self, cands: Sequence[Candidate]) -> None:
         """Commit a run of same-layer candidates (an accepted prefix from
         :meth:`evaluate_prefix`) with one cache refresh for the whole run."""
@@ -519,9 +779,7 @@ class BatchedHWEvaluator:
         mlp = self._mlp
 
         def base(l):
-            w = np.abs(mlp.weights[l])
-            bmax = int(np.abs(mlp.biases[l]).max()) if mlp.biases[l].size else 0
-            return int(w.sum(axis=0).max()) * amax + (bmax << FRAC)
+            return _layer_accum_bound(mlp.weights[l], mlp.biases[l])
 
         extra_k = int(np.abs(dw).sum()) * amax + int(np.abs(db).sum())
         if base(k) + extra_k >= 2 ** 31:
@@ -574,15 +832,7 @@ class BatchedHWEvaluator:
 
     def _score_counts_np(self, a: np.ndarray) -> np.ndarray:
         """Correct counts from final activations (B, Mp, n_out)."""
-        n_out = a.shape[2]
-        score = a * n_out + (n_out - 1 - np.arange(n_out, dtype=np.int64))
-        smax = score.max(axis=2)
-        lab_safe = np.maximum(self._labels, 0)
-        slab = np.take_along_axis(
-            score, np.broadcast_to(lab_safe[None, :, None],
-                                   score.shape[:2] + (1,)), axis=2)[..., 0]
-        slab = np.where(self._labels[None, :] < 0, _NEG, slab)
-        return np.sum(slab == smax, axis=1)
+        return _stacked_score_counts(a, self._labels)
 
     def _counts_np(self, k: int, wi, wj, dw, db) -> np.ndarray:
         """int64 numpy backend: same column / rank-1 / score-trick algebra."""
@@ -627,3 +877,198 @@ class BatchedHWEvaluator:
     def _jax_counts(self, k, pad_to, wi, wj, dw, db,
                     kind: str = "indep") -> np.ndarray:
         return self._jax_state().counts(k, pad_to, wi, wj, dw, db, kind)
+
+
+# ---------------------------------------------------------------------------
+# Multi-q sweep mode: whole-network batches (DESIGN.md 10)
+# ---------------------------------------------------------------------------
+
+class QSweepEvaluator:
+    """Batched scorer for whole-network sweeps (the multi-q evaluation mode,
+    DESIGN.md 10).
+
+    Where :class:`BatchedHWEvaluator` scores mutations of ONE committed
+    network, this evaluator scores a batch of *distinct* ``IntMLP``s sharing
+    one (structure, activations) — the Section IV-A minimum-quantization
+    search's candidate q levels, or any set of quantized/tuned variants — in
+    one stacked ``(Q, M, n)`` integer forward per layer.  Each network
+    requantizes with its own ``q`` shift (array-q :func:`act_requant`), and
+    the final argmax-vs-label comparison uses the same unique-score trick and
+    ``ha_pct`` float expression as the mutation engine, so accuracies are
+    bit-identical to the serial ``hardware_accuracy`` oracle.
+
+    Backends: ``numpy`` (host: stacked BLAS matmuls in float32 below the
+    2^24 accumulator bound, float64 below 2^53 — both exact-integer — and
+    per-network int64 loops past that) and ``jnp`` (int32, jitted per
+    (structure, activations, padded batch size)).  ``auto`` resolves to
+    ``numpy`` on CPU hosts (BLAS beats XLA's int32 matmuls there) and to
+    ``jnp`` on accelerators; ``pallas`` resolves to ``jnp`` too — sweep
+    batches stack a different weight matrix per network, so there is no
+    per-layer CSD plane to cache, and the int32 ``dot_general`` path is the
+    exact integer datapath here (DESIGN.md 10).  Demotion is per *network*,
+    by the mutation-free accumulator bound (:func:`net_accum_bound` /
+    :func:`net_int32_safe` — typically only the highest q levels of a sweep
+    leave the fast tier), never per batch.  ``shard=True`` shards
+    validation rows across devices exactly like the mutation engine
+    (DESIGN.md 7.4).
+
+    Usage (the sweep consumers' contract)::
+
+        ev = QSweepEvaluator(x_val_int, y_val)
+        has = ev.evaluate([quantize_mlp(w, b, acts, q) for q in qs])
+    """
+
+    def __init__(self, x_val_int: np.ndarray, labels: np.ndarray, *,
+                 backend: str = "auto", shard: bool = False,
+                 qchunk: int = 4):
+        if backend not in ("auto", "numpy", "jnp", "pallas"):
+            raise ValueError(backend)
+        self.n_val = int(x_val_int.shape[0])
+        self.qchunk = int(qchunk)
+        self.stats = {"eval_calls": 0, "networks": 0, "demoted": 0}
+
+        if backend in ("auto", "jnp", "pallas"):
+            try:
+                import jax
+                if backend == "auto" and jax.default_backend() == "cpu":
+                    # on CPU hosts the stacked BLAS-float64 path (exact below
+                    # 2^53) beats XLA's int32 matmuls — DESIGN.md 10
+                    self.backend = "numpy"
+                else:
+                    self.backend = "jnp"
+            except Exception:                          # pragma: no cover
+                self.backend = "numpy"
+        else:
+            self.backend = "numpy"
+
+        self._n_shards = 1
+        if shard and self.backend != "numpy":
+            import jax
+            self._n_shards = jax.device_count()
+        pad = (-self.n_val) % self._n_shards
+        x = np.asarray(x_val_int, dtype=np.int64)
+        lab = np.asarray(labels, dtype=np.int64)
+        if pad:
+            x = np.concatenate([x, np.zeros((pad,) + x.shape[1:], np.int64)])
+            lab = np.concatenate([lab, np.full((pad,), -1, np.int64)])
+        self._x = x
+        self._xf = x.astype(np.float64)    # exact: activations are 8-bit
+        self._xf32 = x.astype(np.float32)
+        self._labels = lab
+        self._mp = self.n_val + pad
+        self._np_bufs: dict = {}           # per-layer host scratch stacks
+
+        self._mesh = None
+        if shard and self._n_shards > 1 and self.backend != "numpy":
+            import jax
+            from jax.sharding import Mesh
+            self._mesh = Mesh(np.asarray(jax.devices()), ("data",))
+        self._jax = None
+
+    def evaluate(self, mlps: Sequence[IntMLP]) -> list[float]:
+        """Hardware accuracy (%) of every network, through the oracle's own
+        float expression (``ha_pct``) so threshold comparisons downstream are
+        bit-identical to serial scoring."""
+        return [ha_pct(int(c), self.n_val) for c in self.counts(mlps)]
+
+    def counts(self, mlps: Sequence[IntMLP]) -> np.ndarray:
+        """Exact correct-label counts of every network (int64 array)."""
+        if not mlps:
+            return np.zeros(0, np.int64)
+        ref = mlps[0]
+        for m in mlps[1:]:
+            if [w.shape for w in m.weights] != [w.shape for w in ref.weights]:
+                raise ValueError("sweep networks must share a structure")
+            if list(m.activations) != list(ref.activations):
+                raise ValueError("sweep networks must share activations")
+        out = np.empty(len(mlps), np.int64)
+        for lo in range(0, len(mlps), self.qchunk):
+            chunk = list(mlps[lo:lo + self.qchunk])
+            if self.backend == "numpy":
+                out[lo:lo + len(chunk)] = self._counts_np(chunk)
+            else:
+                safe = [i for i, m in enumerate(chunk) if net_int32_safe(m)]
+                unsafe = [i for i in range(len(chunk)) if i not in safe]
+                if unsafe:                 # per-level demotion (DESIGN.md 10)
+                    self.stats["demoted"] += len(unsafe)
+                    out[[lo + i for i in unsafe]] = \
+                        self._counts_np([chunk[i] for i in unsafe])
+                if safe:
+                    out[[lo + i for i in safe]] = \
+                        self._jax_state().qsweep_counts(
+                            [chunk[i] for i in safe])
+            self.stats["eval_calls"] += 1
+        self.stats["networks"] += len(mlps)
+        return out
+
+    def _counts_np(self, mlps: Sequence[IntMLP]) -> np.ndarray:
+        """Host path: one network at a time over reusable L2-resident
+        buffers.
+
+        Exactness tiers per network, by worst-case accumulator
+        (``net_accum_bound``): below 2^24 the stacked ``(Q, M, n)`` forward
+        runs in float32, below 2^53 in float64 — both exact, because every
+        product and every (blocked / FMA) partial sum is an integer below
+        the dtype's mantissa capacity — with ``_float_requant_inplace``
+        between layers over per-layer scratch buffers that persist across
+        calls (the float32 stack keeps a whole chunk cache-resident,
+        DESIGN.md 10).  Networks past the 2^53 bound (astronomical q) fall
+        back to the always-exact int64 path, one network at a time.  The
+        final argmax-vs-label count is numpy's own first-index ``argmax`` on
+        the exact integer-valued activations — the oracle's computation
+        verbatim; padded rows (label -1) can never match.
+        """
+        out = np.empty(len(mlps), np.int64)
+        f32, f64 = [], []
+        for i, m in enumerate(mlps):
+            bound = net_accum_bound(m)
+            if bound < _F32_EXACT and m.q + FRAC < 24:
+                f32.append(i)
+            elif bound < _F64_EXACT:
+                f64.append(i)
+            else:
+                out[i] = self._count_one_i64(m)
+        for dtype, idx in ((np.float32, f32), (np.float64, f64)):
+            if idx:
+                out[idx] = self._counts_float([mlps[i] for i in idx], dtype)
+        return out
+
+    def _npbuf(self, l: int, q: int, n: int, dtype) -> np.ndarray:
+        key = (l, np.dtype(dtype).itemsize)
+        buf = self._np_bufs.get(key)
+        if buf is None or buf.shape[0] < q or buf.shape[2] != n:
+            buf = self._np_bufs[key] = np.empty(
+                (max(q, self.qchunk), self._mp, n), dtype)
+        return buf[:q]
+
+    def _counts_float(self, mlps: Sequence[IntMLP], dtype) -> np.ndarray:
+        nq = len(mlps)
+        acts = mlps[0].activations
+        inv = np.asarray([math.ldexp(1.0, -m.q) for m in mlps],
+                         dtype)[:, None, None]              # exact 2^-q
+        a = self._xf32 if dtype == np.float32 else self._xf
+        for l in range(len(mlps[0].weights)):
+            w = np.stack([m.weights[l] for m in mlps]).astype(dtype)
+            bsh = np.stack([m.biases[l] for m in mlps]).astype(dtype) \
+                * dtype(1 << FRAC)
+            acc = self._npbuf(l, nq, w.shape[2], dtype)
+            np.matmul(a, w, out=acc)
+            acc += bsh[:, None, :]
+            _float_requant_inplace(acc, acts[l], inv)
+            a = acc
+        pred = np.argmax(a, axis=2)                          # (Q, Mp)
+        return np.sum(pred == self._labels[None, :], axis=1)
+
+    def _count_one_i64(self, m: IntMLP) -> int:
+        a = self._x
+        for l, (w, b) in enumerate(zip(m.weights, m.biases)):
+            acc = a @ np.asarray(w, np.int64) \
+                + (np.asarray(b, np.int64) << FRAC)
+            a = _act_requant_np(acc, m.activations[l], m.q)
+        return int(np.sum(np.argmax(a, axis=1) == self._labels))
+
+    def _jax_state(self):
+        if self._jax is None:
+            from . import jaxtail
+            self._jax = jaxtail.QSweepJax(self)
+        return self._jax

@@ -1,7 +1,8 @@
-"""Jitted jax tails for the batched evaluator (DESIGN.md 7.2-7.4).
+"""Jitted jax tails for the batched evaluators (DESIGN.md 7.2-7.4, 10).
 
-One jitted function per (mutated layer k, candidate-chunk size B) pair,
-closed over the static network config.  Each computes, in int32:
+For the mutation engine (``BatchedHWEvaluator``): one jitted function per
+(mutated layer k, candidate-chunk size B) pair, closed over the static
+network config.  Each computes, in int32:
 
     column update at k  ->  rank-1 update at k+1  ->  dense matmuls k+2..
     ->  unique-score max  ->  per-candidate correct counts
@@ -12,6 +13,12 @@ invalidated on commit); otherwise they are plain int32 ``dot_general`` calls.
 With a mesh, the whole tail is wrapped in ``shard_map`` over the validation
 rows and the counts are ``psum``-reduced, so every device returns the global
 count.
+
+For the sweep engine (``QSweepEvaluator``): ``QSweepJax`` holds the device
+mirrors of the validation rows and one jitted stacked forward per
+(structure, activations, padded batch size) — a batched int32 ``dot_general``
+per layer over the ``(Q, M, n)`` network stack, per-network array-q
+requantization, and the same unique-score counts (DESIGN.md 10).
 """
 from __future__ import annotations
 
@@ -315,6 +322,89 @@ class JaxState:
                         row, row, row, row,
                         tuple([rep] * (n_layers - k - 2)) if use_pallas
                         else (), rep, rep, rep, rep)
+            core = shard_map(core, mesh=ev._mesh, in_specs=in_specs,
+                             out_specs=rep, check_rep=False)
+        return jax.jit(core)
+
+
+class QSweepJax:
+    """Device rows + the jitted stacked-forward registry for the multi-q
+    sweep mode (DESIGN.md 10)."""
+
+    def __init__(self, ev):
+        self.ev = ev
+        self._fns = {}
+        mesh = ev._mesh
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            self._row = NamedSharding(mesh, P("data"))
+            self._rep = NamedSharding(mesh, P())
+        else:
+            self._row = self._rep = None
+        lab = ev._labels.astype(np.int32)
+        self.x = jax.device_put(jnp.asarray(ev._x.astype(np.int32)),
+                                self._row)
+        self.lab = jax.device_put(jnp.asarray(lab), self._row)
+        self.lab_safe = jax.device_put(jnp.asarray(np.maximum(lab, 0)),
+                                       self._row)
+
+    def qsweep_counts(self, mlps) -> np.ndarray:
+        """Exact correct counts of the int32-safe networks in one jitted
+        stacked forward.  Batches are padded (with copies of the first
+        network) to a stable size so jit keys stay per-structure."""
+        n = len(mlps)
+        qpad = 1 if n == 1 else max(n, self.ev.qchunk)
+        padded = list(mlps) + [mlps[0]] * (qpad - n)
+        n_layers = len(mlps[0].weights)
+        # forward_int zips: surplus activation entries never run
+        acts = tuple(mlps[0].activations[:n_layers])
+        shapes = tuple(w.shape for w in mlps[0].weights)
+        fn = self._fns.get((shapes, acts, qpad))
+        if fn is None:
+            fn = self._build_qsweep(acts, qpad)
+            self._fns[(shapes, acts, qpad)] = fn
+        Ws = tuple(jax.device_put(jnp.asarray(np.stack(
+            [np.asarray(m.weights[l], np.int64) for m in padded]
+        ).astype(np.int32)), self._rep) for l in range(n_layers))
+        bshs = tuple(jax.device_put(jnp.asarray((np.stack(
+            [np.asarray(m.biases[l], np.int64) for m in padded]
+        ) << FRAC).astype(np.int32)), self._rep) for l in range(n_layers))
+        qs = jnp.asarray([m.q for m in padded], jnp.int32)
+        out = fn(self.x, self.lab, self.lab_safe, qs, Ws, bshs)
+        return np.asarray(out)[:n].astype(np.int64)
+
+    def _build_qsweep(self, acts, qpad: int):
+        ev = self.ev
+        n_layers = len(acts)
+        q_dims = (((2,), (1,)), ((0,), (0,)))   # (Q,M,i) @ (Q,i,o) -> (Q,M,o)
+        sharded = ev._mesh is not None
+
+        def core(x, lab, lab_safe, qs, Ws, bshs):
+            n_out = Ws[-1].shape[2]
+            a = jnp.broadcast_to(x[None], (qpad,) + x.shape)
+            qcol = qs[:, None, None]
+            for l in range(n_layers):
+                acc = jax.lax.dot_general(
+                    a, Ws[l], q_dims, preferred_element_type=jnp.int32)
+                acc = acc + bshs[l][:, None, :]
+                a = _act_requant(acc, acts[l], qcol)
+            pen = n_out - 1 - jnp.arange(n_out, dtype=jnp.int32)
+            score = a * n_out + pen[None, None, :]
+            smax = jnp.max(score, axis=2)
+            slab = jnp.take_along_axis(
+                score, lab_safe[None, :, None], axis=2)[..., 0]
+            slab = jnp.where(lab[None, :] < 0, _NEG, slab)
+            counts = jnp.sum(slab == smax, axis=1, dtype=jnp.int32)
+            if sharded:
+                counts = jax.lax.psum(counts, "data")
+            return counts
+
+        if sharded:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            row, rep = P("data"), P()
+            in_specs = (row, row, row, rep, tuple([rep] * n_layers),
+                        tuple([rep] * n_layers))
             core = shard_map(core, mesh=ev._mesh, in_specs=in_specs,
                              out_specs=rep, check_rep=False)
         return jax.jit(core)

@@ -8,7 +8,10 @@ Three stages mirroring Sections IV-A / IV-C / V of the paper (DESIGN.md 2):
    gates stay float (accuracy-critical, byte-negligible).
 2. ``min_bitwidth_search`` — the paper's minimum-quantization-value loop with
    the LM metric: lower bits while the quality loss (xent delta on a
-   validation batch) stays under budget.
+   validation batch) stays under budget.  Defaults to the batched sweep
+   engine (quantize every rung once, score the ladder in one stacked call,
+   stopping decisions bit-identical to ``engine="serial"`` — the LM analogue
+   of the multi-q sweep mode, DESIGN.md 10).
 3. ``sls_rescale``      — the paper's smallest-left-shift tuning, PoT form:
    per channel group, try RAISING the shared exponent (coarser grid) while
    the metric budget holds — narrower effective mantissas, fewer HBM bytes.
@@ -108,28 +111,74 @@ def quant_bytes(tree) -> int:
     return total
 
 
+def _eval_many_default(eval_fn):
+    """One-dispatch scorer for a list of same-structure param trees: stack
+    every leaf on a new leading axis and ``lax.map`` ``eval_fn`` over the
+    stack — the per-element computation is ``eval_fn``'s own graph, traced
+    once, so losses match per-tree calls while the whole ladder is scored in
+    a single device dispatch (the LM analogue of the multi-q sweep mode,
+    DESIGN.md 10).  Falls back to per-tree calls if ``eval_fn`` cannot be
+    traced."""
+    def eval_many(trees):
+        try:
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+            return list(np.asarray(jax.lax.map(eval_fn, stacked)))
+        except Exception:
+            return [eval_fn(t) for t in trees]
+    return eval_many
+
+
 def min_bitwidth_search(params, eval_fn, *, budget: float = 0.01,
-                        bit_ladder=(8, 6, 5, 4)) -> tuple:
+                        bit_ladder=(8, 6, 5, 4), engine: str = "batched",
+                        eval_many=None) -> tuple:
     """Paper IV-A at LM scale: walk down the bit ladder while quality holds.
 
     eval_fn(params_float_like) -> scalar loss (lower better). Returns
     (quantized_tree, chosen_bits, history). Budget is a relative loss
-    increase vs the float baseline (default 1%)."""
+    increase vs the float baseline (default 1%).
+
+    ``engine="batched"`` (default) quantizes every ladder rung once up front
+    and scores all rungs in one stacked ``eval_many`` call, then applies the
+    serial stopping walk over the per-rung losses — the returned
+    ``(tree, bits, history)`` is bit-identical to ``engine="serial"``, the
+    original quantize-score-break reference loop (DESIGN.md 10).  Pass
+    ``eval_many(list_of_trees) -> list_of_losses`` to override the default
+    stacked scorer (e.g. to batch across hosts)."""
+    if engine == "serial":
+        base = float(eval_fn(params))
+        history = [("float", base)]
+        chosen = None
+        bits_used = None
+        for bits in bit_ladder:
+            qt = quantize_tree(params, bits=bits)
+            loss = float(eval_fn(dequant(qt)))
+            history.append((bits, loss))
+            if loss <= base * (1.0 + budget):
+                chosen, bits_used = qt, bits
+            else:
+                break
+        if chosen is None:                # even 8 bits broke the budget
+            chosen, bits_used = quantize_tree(params, bits=bit_ladder[0]), \
+                bit_ladder[0]
+        return chosen, bits_used, history
+    if engine != "batched":
+        raise ValueError(engine)
     base = float(eval_fn(params))
+    qts = [quantize_tree(params, bits=b) for b in bit_ladder]  # quantize once
+    if eval_many is None:
+        eval_many = _eval_many_default(eval_fn)
+    losses = [float(x) for x in eval_many([dequant(qt) for qt in qts])]
     history = [("float", base)]
     chosen = None
     bits_used = None
-    for bits in bit_ladder:
-        qt = quantize_tree(params, bits=bits)
-        loss = float(eval_fn(dequant(qt)))
-        history.append((bits, loss))
+    for bits, qt, loss in zip(bit_ladder, qts, losses):  # serial stopping
+        history.append((bits, loss))                     # walk, bit-identical
         if loss <= base * (1.0 + budget):
             chosen, bits_used = qt, bits
         else:
-            break
-    if chosen is None:                    # even 8 bits broke the budget
-        chosen, bits_used = quantize_tree(params, bits=bit_ladder[0]), \
-            bit_ladder[0]
+            break                    # deeper rungs scored but never visited
+    if chosen is None:
+        chosen, bits_used = qts[0], bit_ladder[0]
     return chosen, bits_used, history
 
 

@@ -1,0 +1,324 @@
+"""Multi-q sweep mode + time-multiplexed chain scan (DESIGN.md 10, 7.5).
+
+Oracle parity for QSweepEvaluator across backends and exactness tiers
+(float32 / float64 / int64, per-level int32 demotion), engine parity for
+``find_min_q`` and ``min_bitwidth_search`` (batched == serial ``(q, ha,
+history)`` / ``(bits, history)`` on reject-heavy and improve-heavy synthetic
+runs), and ``evaluate_tm_chain`` against a step-by-step serial simulation of
+the paper IV-C decision tree.
+"""
+import numpy as np
+import pytest
+
+from repro.core import find_min_q
+from repro.core.intmlp import HW_ACTIVATIONS, IntMLP, hardware_accuracy
+from repro.core.tuning import tune_time_multiplexed
+from repro.eval import BatchedHWEvaluator, Candidate, QSweepEvaluator, TMStep
+from repro.eval.batched import net_accum_bound, net_int32_safe
+
+RNG = np.random.default_rng(11)
+
+
+def _rand_mlp(struct, acts, q, scale):
+    ws = [RNG.integers(-scale, scale, (a, b)).astype(np.int64)
+          for a, b in zip(struct[:-1], struct[1:])]
+    bs = [RNG.integers(-max(scale // 2, 2), max(scale // 2, 2), (b,))
+          .astype(np.int64) for b in struct[1:]]
+    return IntMLP(ws, bs, list(acts), q)
+
+
+def _rand_data(struct, m=97):
+    x = RNG.integers(-128, 128, (m, struct[0])).astype(np.int64)
+    y = RNG.integers(0, struct[-1], m)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# QSweepEvaluator: whole-network batches vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["numpy", "jnp"])
+def test_qsweep_oracle_parity(backend):
+    """Every network of a mixed-q batch scores exactly the oracle accuracy,
+    for random structures, activations, and q levels (all float tiers)."""
+    for trial in range(10):
+        n_layers = int(RNG.integers(1, 4))
+        struct = tuple(int(RNG.integers(3, 11)) for _ in range(n_layers + 1))
+        acts = [str(RNG.choice(HW_ACTIVATIONS)) for _ in range(n_layers)]
+        x, y = _rand_data(struct)
+        mlps = []
+        for _ in range(5):
+            q = int(RNG.integers(1, 17))
+            mlps.append(_rand_mlp(struct, acts, q,
+                                  1 << int(RNG.integers(1, min(q + 2, 20)))))
+        ev = QSweepEvaluator(x, y, backend=backend, qchunk=3)  # chunk split
+        assert ev.evaluate(mlps) == [hardware_accuracy(m, x, y)
+                                     for m in mlps], (trial, struct, acts)
+
+
+def test_qsweep_mixed_tiers_stay_exact():
+    """One batch spanning the float32 / float64 / int64 exactness tiers
+    (DESIGN.md 10) keeps order and bit-exactness; on the jnp backend the
+    int32-unsafe levels demote per network, not per batch."""
+    struct, acts = (6, 5), ("lin",)
+    x, y = _rand_data(struct, 53)
+    small = _rand_mlp(struct, acts, 4, 40)                 # f32 tier
+    mid = IntMLP([np.full((6, 5), 1 << 26, np.int64)],
+                 [np.zeros(5, np.int64)], ["lin"], 16)     # f64 tier
+    huge = IntMLP([np.full((6, 5), 1 << 50, np.int64)],
+                  [np.zeros(5, np.int64)], ["lin"], 16)    # int64 tier
+    assert net_accum_bound(small) < 2 ** 24
+    assert not net_int32_safe(mid) and not net_int32_safe(huge)
+    ref = [hardware_accuracy(m, x, y) for m in (small, mid, huge)]
+    for backend in ("numpy", "jnp"):
+        ev = QSweepEvaluator(x, y, backend=backend)
+        assert ev.evaluate([small, mid, huge]) == ref, backend
+        if ev.backend == "jnp":
+            assert ev.stats["demoted"] == 2
+
+
+def test_qsweep_guards():
+    x, y = _rand_data((6, 5, 4), 40)
+    ev = QSweepEvaluator(x, y, backend="numpy")
+    a = _rand_mlp((6, 5, 4), ("htanh", "hsig"), 4, 16)
+    with pytest.raises(ValueError, match="structure"):
+        ev.evaluate([a, _rand_mlp((6, 4, 4), ("htanh", "hsig"), 4, 16)])
+    with pytest.raises(ValueError, match="activations"):
+        ev.evaluate([a, _rand_mlp((6, 5, 4), ("relu", "hsig"), 4, 16)])
+    with pytest.raises(ValueError):
+        QSweepEvaluator(x, y, backend="tpuv7")
+
+
+# ---------------------------------------------------------------------------
+# find_min_q: batched == serial, reject-heavy and improve-heavy
+# ---------------------------------------------------------------------------
+
+def _rand_float_net(struct):
+    ws = [RNG.normal(0, 0.8, (a, b)) for a, b in zip(struct[:-1], struct[1:])]
+    bs = [RNG.normal(0, 0.3, b) for b in struct[1:]]
+    return ws, bs
+
+
+@pytest.mark.parametrize("budget,q_max", [
+    (5.0, 12),     # reject-heavy: a big budget stops at the first plateau
+    (-1.0, 10),    # improve-heavy: only a >1-point drop stops the search
+    (0.1, 16),     # the paper's setting
+])
+def test_find_min_q_engine_parity(budget, q_max):
+    """Identical (q, ha, history) and identical quantized weights across
+    engines, for every block size (stop mid-block, at block edge, past)."""
+    for trial in range(4):
+        struct = (8, 7, 5)
+        acts = ("htanh", "hsig")
+        ws, bs = _rand_float_net(struct)
+        x, y = _rand_data(struct, 151)
+        s = find_min_q(ws, bs, acts, x, y, budget_pct=budget, q_max=q_max,
+                       engine="serial")
+        for block in (1, 3, 8):
+            b = find_min_q(ws, bs, acts, x, y, budget_pct=budget,
+                           q_max=q_max, block=block, engine="batched")
+            assert (s.q, s.ha, s.history) == (b.q, b.ha, b.history), \
+                (trial, budget, block)
+            for wa, wb in zip(s.mlp.weights, b.mlp.weights):
+                np.testing.assert_array_equal(wa, wb)
+            for ba, bb in zip(s.mlp.biases, b.mlp.biases):
+                np.testing.assert_array_equal(ba, bb)
+
+
+def test_find_min_q_parity_through_demotion():
+    """Large float weights push high q levels past the int32 bound mid-sweep:
+    the jnp evaluator demotes those levels per network and the stopping
+    decisions still match the serial loop exactly."""
+    struct, acts = (8, 6, 4), ("satlin", "hsig")
+    ws = [RNG.normal(0, 60.0, (a, b)) for a, b in zip(struct[:-1], struct[1:])]
+    bs = [RNG.normal(0, 5.0, b) for b in struct[1:]]
+    x, y = _rand_data(struct, 101)
+    s = find_min_q(ws, bs, acts, x, y, budget_pct=-1.0, q_max=16,
+                   engine="serial")
+    ev = QSweepEvaluator(x, y, backend="jnp")
+    b = find_min_q(ws, bs, acts, x, y, budget_pct=-1.0, q_max=16,
+                   evaluator=ev)
+    assert (s.q, s.ha, s.history) == (b.q, b.ha, b.history)
+    assert ev.stats["demoted"] > 0        # high-q levels left the device
+
+
+def test_find_min_q_shared_evaluator_across_searches():
+    """One QSweepEvaluator serves many searches (the paper-table pipeline
+    pattern) without cross-contamination."""
+    struct, acts = (8, 7, 5), ("htanh", "hsig")
+    x, y = _rand_data(struct, 151)
+    ev = QSweepEvaluator(x, y, backend="numpy")
+    for trial in range(3):
+        ws, bs = _rand_float_net(struct)
+        s = find_min_q(ws, bs, acts, x, y, engine="serial")
+        b = find_min_q(ws, bs, acts, x, y, evaluator=ev)
+        assert (s.q, s.ha, s.history) == (b.q, b.ha, b.history), trial
+
+
+# ---------------------------------------------------------------------------
+# min_bitwidth_search: batched == serial on the LM bit ladder
+# ---------------------------------------------------------------------------
+
+def test_min_bitwidth_search_engine_parity():
+    jnp = pytest.importorskip("jax.numpy")
+    import jax
+    from repro.quant import dequant, min_bitwidth_search
+
+    key = jax.random.PRNGKey(0)
+    params = {"wq": jax.random.normal(key, (8, 16)) * 0.1,
+              "ln": jnp.ones((16,))}            # 1-D: stays float
+
+    def eval_fn(p):                             # deterministic quality metric
+        return jnp.sum(jnp.abs(p["wq"])) + jnp.sum(p["ln"])
+
+    def leaves(t):
+        return jax.tree_util.tree_leaves(
+            t, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+    # reject-heavy (tiny budget: stops at the first rung), improve-heavy
+    # (huge budget: walks the whole ladder), and the default
+    for budget in (1e-9, 10.0, 0.01):
+        qs, bits_s, hist_s = min_bitwidth_search(params, eval_fn,
+                                                 budget=budget,
+                                                 engine="serial")
+        qb, bits_b, hist_b = min_bitwidth_search(params, eval_fn,
+                                                 budget=budget,
+                                                 engine="batched")
+        assert bits_s == bits_b and hist_s == hist_b, budget
+        for ls, lb in zip(leaves(qs), leaves(qb)):
+            if isinstance(ls, dict):
+                np.testing.assert_array_equal(np.asarray(ls["q"]),
+                                              np.asarray(lb["q"]))
+                np.testing.assert_array_equal(np.asarray(ls["exp"]),
+                                              np.asarray(lb["exp"]))
+            else:
+                np.testing.assert_array_equal(np.asarray(ls),
+                                              np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# evaluate_tm_chain: the IV-C decision tree as one chain scan
+# ---------------------------------------------------------------------------
+
+def _simulate_tm_serial(mlp, steps, bha, x, y):
+    """Reference: the serial tuner's steps 2b-2d applied literally."""
+    m2, best = mlp.copy(), bha
+    decisions = []
+    for s in steps:
+        col = m2.weights[s.layer][:, s.col]
+        old_w = int(col[s.row])
+        cands = []
+        for pw in s.pws:
+            col[s.row] = pw
+            cands.append((hardware_accuracy(m2, x, y), pw))
+        col[s.row] = old_w
+        cands.sort(reverse=True)
+        ha_best, pw_best = cands[0]
+        if ha_best >= best:
+            col[s.row] = pw_best
+            best = ha_best
+            decisions.append((True, pw_best, 0, ha_best))
+            continue
+        col[s.row] = pw_best
+        committed = False
+        for db in s.dbs:
+            m2.biases[s.layer][s.col] += db
+            ha = hardware_accuracy(m2, x, y)
+            if ha >= best:
+                best = ha
+                decisions.append((True, pw_best, db, ha))
+                committed = True
+                break
+            m2.biases[s.layer][s.col] -= db
+        if not committed:
+            col[s.row] = old_w
+            decisions.append((False, pw_best, 0, ha_best))
+    return m2, best, decisions
+
+
+def _rand_steps(mlp, k, n_steps, q):
+    seen, steps = set(), []
+    n_in, n_out = mlp.weights[k].shape
+    dbs = tuple(db for db in range(-4, 5) if db != 0)
+    while len(steps) < n_steps and len(seen) < n_in * n_out:
+        i = int(RNG.integers(0, n_in))
+        j = int(RNG.integers(0, n_out))
+        if (i, j) in seen:
+            continue
+        seen.add((i, j))
+        pws = tuple(int(v) for v in
+                    RNG.integers(-(1 << q), 1 << q, int(RNG.integers(1, 3))))
+        steps.append(TMStep(k, j, i, pws, dbs))
+    return steps
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jnp"])
+def test_tm_chain_matches_serial_decision_tree(backend):
+    """evaluate_tm_chain reproduces the serial candidate-pair + bias-nudge
+    tree decision for decision, on shallow and deep (dense-tail) layers,
+    and commit_many of the accepts restores cache integrity."""
+    for struct, acts in [((8, 6, 4), ("htanh", "hsig")),
+                         ((7, 7, 6, 5), ("htanh", "relu", "hsig"))]:
+        q = 4
+        mlp = _rand_mlp(struct, acts, q, 20)
+        x, y = _rand_data(struct, 173)
+        for k in range(len(mlp.weights)):
+            ev = BatchedHWEvaluator(mlp, x, y, backend=backend, chunk=16)
+            bha = ev.accuracy()
+            steps = _rand_steps(mlp, k, 9, q)
+            decisions = ev.evaluate_tm_chain(steps, bha)
+            m2, best, ref = _simulate_tm_serial(mlp, steps, bha, x, y)
+            assert decisions == ref, (struct, k, backend)
+            accepted = [Candidate(s.layer, s.col, s.row, d[1], dbias=d[2])
+                        for s, d in zip(steps, decisions) if d[0]]
+            ev.commit_many(accepted)
+            assert ev.accuracy() == best == hardware_accuracy(ev.mlp, x, y)
+            for wa, wb in zip(ev.mlp.weights, m2.weights):
+                np.testing.assert_array_equal(wa, wb)
+            for ba, bb in zip(ev.mlp.biases, m2.biases):
+                np.testing.assert_array_equal(ba, bb)
+
+
+def test_tm_chain_guards():
+    mlp = _rand_mlp((8, 6, 4), ("htanh", "hsig"), 4, 16)
+    x, y = _rand_data((8, 6, 4), 40)
+    ev = BatchedHWEvaluator(mlp, x, y, backend="numpy")
+    bha = ev.accuracy()
+    with pytest.raises(ValueError, match="layer"):
+        ev.evaluate_tm_chain([TMStep(0, 1, 2, (5,)), TMStep(1, 1, 2, (5,))],
+                             bha)
+    with pytest.raises(ValueError, match="distinct"):
+        ev.evaluate_tm_chain([TMStep(0, 1, 2, (5,)), TMStep(0, 1, 2, (7,))],
+                             bha)
+    with pytest.raises(ValueError, match="candidate value"):
+        ev.evaluate_tm_chain([TMStep(0, 1, 2, ())], bha)
+    with pytest.raises(ValueError, match="greedy invariant"):
+        ev.evaluate_tm_chain([TMStep(0, 1, 2, (5,))], bha + 1.0)
+
+
+def test_tune_tm_chain_tuner_regression():
+    """Full tuner runs on random nets: the chain-scan batched engine makes
+    decisions identical to the serial tuner, bias nudges included."""
+    total_repl = 0
+    for seed, scope in [(0, "neuron"), (1, "ann"), (2, "neuron")]:
+        rng = np.random.default_rng(seed)
+        ws = [rng.integers(-24, 24, (8, 6)).astype(np.int64),
+              rng.integers(-24, 24, (6, 4)).astype(np.int64)]
+        bs = [rng.integers(-8, 8, (6,)).astype(np.int64),
+              rng.integers(-8, 8, (4,)).astype(np.int64)]
+        mlp = IntMLP(ws, bs, ["htanh", "hsig"], 4)
+        x = rng.integers(-128, 128, (211, 8)).astype(np.int64)
+        y = rng.integers(0, 4, 211)
+        serial = tune_time_multiplexed(mlp, x, y, scope=scope, max_sweeps=2,
+                                       engine="serial")
+        batched = tune_time_multiplexed(mlp, x, y, scope=scope, max_sweeps=2,
+                                        engine="batched")
+        assert serial.bha == batched.bha
+        assert serial.replacements == batched.replacements
+        assert serial.log == batched.log
+        for wa, wb in zip(serial.mlp.weights, batched.mlp.weights):
+            np.testing.assert_array_equal(wa, wb)
+        for ba, bb in zip(serial.mlp.biases, batched.mlp.biases):
+            np.testing.assert_array_equal(ba, bb)
+        total_repl += serial.replacements
+    assert total_repl > 0          # the decision tree actually fired
