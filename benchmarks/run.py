@@ -7,11 +7,13 @@ benchmarks read the dry-run ledger and time the Pallas kernels (interpret
 mode on CPU — correctness-representative, not TPU wall-clock; the roofline
 section is the TPU performance statement).
 
-The ``tuning`` and ``sweep`` sections are the batched-engine statements
-(DESIGN.md 7 and 10): serial seed path vs batched engine with identical
-decisions asserted, wall-clock speedups reported.  ``--smoke`` shrinks the
-``sweep`` section (fewer epochs/reps, validation split only) so CI can
-exercise sweep parity on every push:
+The ``tuning``, ``sweep``, and ``mless`` sections are the batched-engine
+statements (DESIGN.md 7, 10, and 11): serial seed path vs batched engine /
+scalar recoding vs array engine / uncached vs planner-cached synthesis /
+per-q vs stacked digit-plane dispatch, with identical decisions asserted
+and wall-clock speedups reported.  ``--smoke`` shrinks the ``sweep`` and
+``mless`` sections (fewer epochs/reps, smaller sizes) so CI can exercise
+parity on every push:
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--only substring]
           [--skip-paper] [--smoke]
@@ -212,6 +214,129 @@ def bench_sweep():
     return rows
 
 
+def bench_mless():
+    """Tentpole benchmark: the vectorized multiplierless subsystem
+    (DESIGN.md 11) — array-CSD recoding vs the scalar per-value loop,
+    planner-cached vs uncached shift-add synthesis over a paper-table
+    pricing run, and the digit-plane sweep kernel vs per-q dispatch.
+    Parity (bit-identical tnzd / adder counts / kernel outputs / min-q
+    decisions) is asserted on every row; ``--smoke`` shrinks sizes for CI."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import csd
+    from repro.core.archs import design_cost
+    from repro.core.intmlp import IntMLP
+    from repro.core.planner import SynthesisPlanner, default_planner
+    from repro.core.quantize import find_min_q
+    from repro.kernels import (csd_expand, csd_expand_stack, csd_matvec,
+                               csd_qsweep)
+
+    rng = np.random.default_rng(0)
+    rows = []
+    reps = 2 if SMOKE else 5
+
+    # -- array-CSD vs scalar recoding: tnzd of a paper-table-scale weight set
+    # (15 runs x a (16, 16, 10) net ~ 7k values; scaled up off-smoke)
+    n_vals = 7_000 if SMOKE else 70_000
+    vals = rng.integers(-(1 << 12), 1 << 12, n_vals)
+    t_scalar = csd.tnzd([vals], engine="scalar")
+    t0 = time.time()
+    for _ in range(reps):
+        t_scalar = csd.tnzd([vals], engine="scalar")
+    s_scalar = (time.time() - t0) / reps
+    t0 = time.time()
+    for _ in range(reps):
+        t_array = csd.tnzd([vals], engine="array")
+    s_array = (time.time() - t0) / reps
+    assert t_array == t_scalar, "tnzd engine mismatch!"
+    rows.append((f"mless/tnzd/{n_vals}vals", s_array * 1e6,
+                 f"scalar_s={s_scalar:.4f};array_s={s_array:.6f};"
+                 f"speedup={s_scalar / s_array:.1f}x;identical=yes;"
+                 f"tnzd={t_array}"))
+
+    # -- planner-cached vs uncached synthesis, per paper-table pricing run:
+    # figs16-18 price the same tuned networks as CAVM + CMVM + MCM *and*
+    # SIMURG re-synthesizes the same columns for the RTL — model that as two
+    # pricing passes over each structure's layers.
+    structures = [(16, 10)] if SMOKE else [(16, 10), (16, 16, 10)]
+    mlps = []
+    for st in structures:
+        ws = [rng.integers(-127, 128, (a, b)).astype(np.int64)
+              for a, b in zip(st[:-1], st[1:])]
+        bs = [rng.integers(-15, 16, (b,)).astype(np.int64) for b in st[1:]]
+        acts = ["htanh"] * (len(st) - 2) + ["hsig"]
+        mlps.append(IntMLP(ws, bs, acts, q=5))
+
+    def pricing_pass():
+        out = []
+        for m in mlps:
+            for style in ("cavm", "cmvm"):
+                out.append(design_cost(m, "parallel", style).n_adders)
+            out.append(design_cost(m, "smac_neuron", "mcm").n_adders)
+        return out
+
+    default_planner.clear()
+    t0 = time.time()
+    cold = pricing_pass()            # uncached: every column synthesized
+    s_uncached = time.time() - t0
+    t0 = time.time()
+    warm = pricing_pass()            # cached: simurg/table re-pricing regime
+    s_cached = time.time() - t0
+    assert cold == warm, "planner adder-count mismatch!"
+    hits, misses = (default_planner.stats["hits"],
+                    default_planner.stats["misses"])
+    rows.append(("mless/planner/pricing_pass", s_cached * 1e6,
+                 f"uncached_s={s_uncached:.3f};cached_s={s_cached:.4f};"
+                 f"speedup={s_uncached / max(s_cached, 1e-9):.1f}x;"
+                 f"identical=yes;hits={hits};misses={misses}"))
+
+    # -- digit-plane sweep kernel: all q levels in one dispatch vs per-q
+    Q, M, K, N = (4, 128, 16, 16) if SMOKE else (6, 512, 16, 16)
+    Ws = [rng.integers(-(1 << (q + 3)), 1 << (q + 3), (K, N))
+          for q in range(Q)]
+    planes = jnp.asarray(csd_expand_stack(Ws))
+    per_q = [jnp.asarray(csd_expand(w)) for w in Ws]
+    xs = jnp.asarray(rng.integers(-128, 128, (Q, M, K)), jnp.int32)
+    y_stack = csd_qsweep(xs, planes).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        y_stack = csd_qsweep(xs, planes).block_until_ready()
+    s_stack = (time.time() - t0) / reps
+    ys = [csd_matvec(xs[q], planes=per_q[q]).block_until_ready()
+          for q in range(Q)]
+    t0 = time.time()
+    for _ in range(reps):
+        ys = [csd_matvec(xs[q], planes=per_q[q]).block_until_ready()
+              for q in range(Q)]
+    s_perq = (time.time() - t0) / reps
+    for q in range(Q):
+        np.testing.assert_array_equal(np.asarray(y_stack[q]),
+                                      np.asarray(ys[q]))
+    rows.append((f"mless/csd_qsweep/{Q}x{M}x{K}x{N}", s_stack * 1e6,
+                 f"per_q_s={s_perq:.4f};stacked_s={s_stack:.4f};"
+                 f"speedup={s_perq / s_stack:.2f}x;identical=yes;"
+                 f"digit_planes={planes.shape[1]}"))
+
+    # -- end-to-end: the IV-A min-q search on the digit-plane sweep backend
+    # reproduces the qmatmul-path decisions exactly (acceptance criterion)
+    from repro.eval import QSweepEvaluator
+    n_in, n_hid, n_out, n_rows = 16, 12, 10, 256 if SMOKE else 1024
+    w1 = rng.normal(0, 0.5, (n_in, n_hid)); b1 = rng.normal(0, 0.2, n_hid)
+    w2 = rng.normal(0, 0.5, (n_hid, n_out)); b2 = rng.normal(0, 0.2, n_out)
+    acts = ("htanh", "hsig")
+    xv = rng.integers(-128, 128, (n_rows, n_in)).astype(np.int64)
+    yv = rng.integers(0, n_out, n_rows)
+    qs_ser = find_min_q([w1, w2], [b1, b2], acts, xv, yv, engine="serial")
+    evp = QSweepEvaluator(xv, yv, backend="pallas")
+    qs_pal = find_min_q([w1, w2], [b1, b2], acts, xv, yv, evaluator=evp)
+    assert (qs_ser.q, qs_ser.ha, qs_ser.history) == \
+        (qs_pal.q, qs_pal.ha, qs_pal.history), "digit-plane min-q mismatch!"
+    rows.append((f"mless/find_min_q_pallas/val{n_rows}", 0.0,
+                 f"identical_decisions=yes;q={qs_pal.q};"
+                 f"levels={len(qs_pal.history)};backend={evp.backend}"))
+    return rows
+
+
 def bench_roofline():
     """Summarize the dry-run ledger (produced by repro.launch.dryrun)."""
     path = os.path.join(os.path.dirname(__file__), "..",
@@ -297,6 +422,7 @@ def bench_ptq_decode():
 SECTIONS = {
     "tuning": bench_tuning,
     "sweep": bench_sweep,
+    "mless": bench_mless,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
     "serving": bench_serving,

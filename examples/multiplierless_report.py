@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import find_min_q, mcm, quantize_inputs
 from repro.core.csd import nnz, tnzd, to_csd
+from repro.core.planner import default_planner as planner
 from repro.core.quantize import quantize_mlp
 from repro.data import pendigits
 from repro.train.zaal import TrainConfig, train
@@ -65,10 +66,14 @@ def main():
           f"   (layer-1 CMVM)")
     for q, ha in qr.history:
         mlp_q = quantize_mlp(res.weights, res.biases, ("htanh", "hsig"), q)
-        adders = mcm.synthesize(mlp_q.weights[0].T, "cse").n_adders
+        # shared planner (DESIGN.md 11.3): repeat trajectories (and the
+        # design_cost/simurg consumers) reuse these plans for free
+        adders = planner.cmvm_graph(mlp_q.weights[0]).n_adders
         t = tnzd(mlp_q.weights + mlp_q.biases)
         chosen = "  <- chosen" if q == qr.q else ""
         print(f"   {q:4d} {ha:7.2f} {t:6d} {adders:11d}{chosen}")
+    print(f"   planner: {planner.stats['misses']} plans synthesized, "
+          f"{planner.stats['hits']} cache-served")
 
 
 if __name__ == "__main__":

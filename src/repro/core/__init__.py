@@ -2,7 +2,8 @@
 and multiplierless shift-add realization of feedforward ANNs, plus the SIMURG
 CAD tool and the gate-level cost model used for all paper-analogue benchmarks.
 """
-from . import archs, csd, hwmodel, intmlp, mcm, quantize, simurg, tuning  # noqa: F401
+from . import (archs, csd, hwmodel, intmlp, mcm, planner, quantize,  # noqa: F401
+               simurg, tuning)
 from .intmlp import IntMLP, forward_int, hardware_accuracy, quantize_inputs  # noqa: F401
 from .quantize import find_min_q, quantize_mlp, quantize_value  # noqa: F401
 from .tuning import tune_parallel, tune_time_multiplexed  # noqa: F401

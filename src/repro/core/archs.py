@@ -21,8 +21,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from . import hwmodel, mcm
+from . import hwmodel
 from .hwmodel import TECH40, Primitive, acc_bits, adder, mux, register
+from .planner import default_planner as planner
 from .intmlp import FRAC, IntMLP
 from .tuning import sls_of
 
@@ -104,11 +105,11 @@ def _parallel(mlp: IntMLP, style: str, tech) -> DesignReport:
             # (neurons are parallel, not chained)
             layer_delay = mult_delay + tree_delay
         elif style in ("cavm", "cmvm"):
+            # shared planner: simurg.generate and repeat pricing reuse these
             if style == "cavm":
-                graphs = [mcm.synthesize(w[:, m][None, :], "cse")
-                          for m in range(n_out)]
+                graphs = planner.cavm_graphs(w)
             else:
-                graphs = [mcm.synthesize(w.T, "cse")]   # (n_out, n_in) matrix
+                graphs = [planner.cmvm_graph(w)]   # (n_out, n_in) matrix
             gdelay = 0.0
             for g in graphs:
                 bounds = g.value_bounds(input_max=(1 << (BITS_X - 1)))
@@ -176,7 +177,7 @@ def _smac_neuron(mlp: IntMLP, style: str, tech) -> DesignReport:
                                         if int(v) != 0}), dtype=np.int64)
             if consts.size == 0:
                 consts = np.asarray([1], dtype=np.int64)
-            g = mcm.synthesize(consts[:, None], "cse")  # MCM: (m,1) matrix
+            g = planner.mcm_graph(consts)               # MCM: (m,1) matrix
             bounds = g.value_bounds(input_max=(1 << (BITS_X - 1)))
             for bnd in bounds:
                 p = adder(max(1, int(bnd).bit_length() + 1), tech)
@@ -231,7 +232,7 @@ def _smac_ann(mlp: IntMLP, style: str, tech) -> DesignReport:
     elif style == "mcm":
         consts = np.asarray(sorted({abs(int(v)) for v in all_w if int(v) != 0}),
                             dtype=np.int64)[:, None]
-        g = mcm.synthesize(consts, "cse")
+        g = planner.mcm_graph(consts)
         a = sum(adder(max(1, int(b).bit_length() + 1), tech).area
                 for b in g.value_bounds(1 << (BITS_X - 1)))
         e = sum(adder(max(1, int(b).bit_length() + 1), tech).energy

@@ -1,9 +1,29 @@
-"""Canonical signed digit (CSD) arithmetic.
+"""Canonical signed digit (CSD) arithmetic — scalar reference + array engine.
 
 CSD writes an integer as sum_i d_i 2^i with d_i in {-1, 0, +1}, no two
 adjacent nonzero digits, and the minimum possible number of nonzero digits.
 The paper's hardware-cost proxy ``tnzd`` is the total nonzero-digit count of
 all weights/biases under CSD (Section II-B, footnote 1).
+
+Two engines live here (DESIGN.md 11.1):
+
+* the **scalar reference** (``to_csd`` / ``from_csd`` / ``nnz`` and the
+  per-value helpers) — the seed's digit-at-a-time recoding, kept verbatim as
+  the bit-exactness oracle;
+* the **array engine** (``to_csd_array`` and the ``*_array`` helpers) — a
+  closed-form bitwise recoding over whole int64 arrays.  The scalar loop's
+  digit rule ``d = 2 - (v mod 4)`` is exactly the non-adjacent form, whose
+  digits have a closed form in two's complement: the nonzero-digit positions
+  of ``v`` are the set bits of ``(3v XOR v) >> 1``, and the digit at
+  position ``i`` is ``+1`` iff bit ``i`` of ``(3v) >> 1`` is set.  Three
+  vector ops therefore recode an arbitrary-shape array into ``(D, ...)``
+  digit planes, and popcounts of the nonzero mask give ``nnz``/``tnzd``
+  without materializing planes at all.
+
+Both engines are bit-identical on the valid domain ``|v| < 2**61`` (the
+``3v`` intermediate needs two spare bits; hardware weights are tiny);
+``tests/test_csd_mcm.py`` asserts parity on negatives, zero, and values at
+the digit-plane depth limit.
 """
 from __future__ import annotations
 
@@ -16,7 +36,15 @@ __all__ = [
     "tnzd",
     "drop_least_significant_digit",
     "largest_left_shift",
+    "to_csd_array",
+    "from_csd_array",
+    "nnz_array",
+    "drop_least_significant_digit_array",
+    "largest_left_shift_array",
 ]
+
+# Valid domain of the array engine: |v| < 2^61 keeps 3*v inside int64.
+_MAX_ABS = 1 << 61
 
 
 def to_csd(value: int) -> list[int]:
@@ -49,16 +77,92 @@ def nnz(value: int) -> int:
     return sum(1 for d in to_csd(value) if d != 0)
 
 
-def tnzd(int_arrays) -> int:
+# ---------------------------------------------------------------------------
+# Array engine: closed-form bitwise recoding (DESIGN.md 11.1)
+# ---------------------------------------------------------------------------
+
+def _csd_masks(values) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(v, nz, plus): ``nz`` bit i set iff CSD digit i of v is nonzero;
+    ``plus`` bit i set iff that digit is +1.  Two's-complement identities of
+    the non-adjacent form — exact for ``|v| < 2**61``."""
+    v = np.asarray(values, dtype=np.int64)
+    # min/max, not abs: np.abs(int64 min) wraps back to int64 min
+    if v.size and (int(v.min()) <= -_MAX_ABS or int(v.max()) >= _MAX_ABS):
+        raise OverflowError("array CSD engine requires |v| < 2**61")
+    v3 = 3 * v
+    nz = (v3 ^ v) >> 1          # nonnegative: sign bits of v3 and v agree
+    plus = v3 >> 1
+    return v, nz, plus
+
+
+def _popcount(x: np.ndarray) -> np.ndarray:
+    return np.bitwise_count(x.astype(np.uint64)).astype(np.int64)
+
+
+if not hasattr(np, "bitwise_count"):        # pragma: no cover - numpy < 2.0
+    def _popcount(x: np.ndarray) -> np.ndarray:  # noqa: F811 (SWAR fallback)
+        x = x.astype(np.uint64)
+        x = x - ((x >> np.uint64(1)) & np.uint64(0x5555555555555555))
+        x = ((x >> np.uint64(2)) & np.uint64(0x3333333333333333)) \
+            + (x & np.uint64(0x3333333333333333))
+        x = (x + (x >> np.uint64(4))) & np.uint64(0x0F0F0F0F0F0F0F0F)
+        return ((x * np.uint64(0x0101010101010101)) >> np.uint64(56)) \
+            .astype(np.int64)
+
+
+def to_csd_array(values, depth: int | None = None) -> np.ndarray:
+    """CSD digit planes of an arbitrary-shape integer array.
+
+    Returns ``(D, *values.shape)`` int8 planes, least-significant first, with
+    ``plane[i]`` holding digit i of every element — the layout the digit-plane
+    matvec kernels consume (``repro.kernels.csd_expand`` stacks exactly this).
+    ``D`` is the smallest depth covering every element (>= 1), or ``depth``
+    when given (which must cover; planes past the last nonzero digit are 0).
+    Bit-identical to stacking the scalar ``to_csd`` digit lists.
+    """
+    v, nz, plus = _csd_masks(values)
+    need = int(nz.max()).bit_length() if v.size else 0
+    if depth is None:
+        depth = max(1, need)
+    elif need > depth:
+        raise ValueError(f"depth {depth} < required digit depth {need}")
+    shifts = np.arange(depth, dtype=np.int64).reshape((depth,) + (1,) * v.ndim)
+    bits = (nz[None] >> shifts) & 1
+    sign = (((plus[None] >> shifts) & 1) << 1) - 1
+    return (bits * sign).astype(np.int8)
+
+
+def from_csd_array(planes: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`to_csd_array`: ``(D, ...)`` digit planes -> values."""
+    planes = np.asarray(planes, dtype=np.int64)
+    weights = (np.int64(1) << np.arange(planes.shape[0], dtype=np.int64)) \
+        .reshape((planes.shape[0],) + (1,) * (planes.ndim - 1))
+    return (planes * weights).sum(axis=0)
+
+
+def nnz_array(values) -> np.ndarray:
+    """Per-element nonzero CSD digit counts (``nnz`` over a whole array)."""
+    _, nz, _ = _csd_masks(values)
+    return _popcount(nz)
+
+
+def tnzd(int_arrays, engine: str = "array") -> int:
     """Total nonzero CSD digits over a collection of integer arrays.
 
     This is the paper's high-level hardware cost (Tables I-IV column tnzd).
+    ``engine="array"`` (default) popcounts the closed-form nonzero masks in
+    one pass per array; ``engine="scalar"`` is the seed's per-value loop,
+    kept as the parity reference for tests.
     """
-    total = 0
-    for arr in int_arrays:
-        flat = np.asarray(arr).ravel()
-        total += int(sum(nnz(int(v)) for v in flat))
-    return total
+    if engine == "scalar":
+        total = 0
+        for arr in int_arrays:
+            flat = np.asarray(arr).ravel()
+            total += int(sum(nnz(int(v)) for v in flat))
+        return total
+    if engine != "array":
+        raise ValueError(engine)
+    return int(sum(int(nnz_array(arr).sum()) for arr in int_arrays))
 
 
 def drop_least_significant_digit(value: int) -> int:
@@ -73,6 +177,15 @@ def drop_least_significant_digit(value: int) -> int:
             digits[i] = 0
             return from_csd(digits)
     return 0
+
+
+def drop_least_significant_digit_array(values) -> np.ndarray:
+    """Whole-array :func:`drop_least_significant_digit`: subtract each
+    element's least-significant nonzero CSD digit (zeros stay zero)."""
+    v, nz, plus = _csd_masks(values)
+    low = nz & -nz                       # lowest nonzero-digit position bit
+    sign = np.where(plus & low, np.int64(1), np.int64(-1))
+    return v - sign * low
 
 
 def largest_left_shift(value: int) -> int:
@@ -90,3 +203,10 @@ def largest_left_shift(value: int) -> int:
         value >>= 1
         lls += 1
     return lls
+
+
+def largest_left_shift_array(values) -> np.ndarray:
+    """Whole-array :func:`largest_left_shift` (63 sentinel for zeros)."""
+    v = np.asarray(values, dtype=np.int64)
+    low = v & -v
+    return np.where(v == 0, np.int64(63), _popcount(low - 1))

@@ -15,6 +15,14 @@ shifted terms — which SIMURG lowers to Verilog, the cost model prices, and
 
 An MCM operation (m constants, one variable) is a CMVM with an (m x 1) matrix;
 a CAVM (one output row) is a (1 x n) matrix; SCM is (1 x 1).
+
+The greedy CSE loop's pattern counting runs as a batched numpy pass
+(``_pattern_engine="np"``: packed-int canonical pair keys over
+``triu_indices`` pair grids, unique-counted per output) with the seed's
+per-pattern ``Counter`` rescan kept as the parity reference
+(``_pattern_engine="py"``); both pick bit-identical patterns, including
+``Counter.most_common``'s first-inserted tie-break (DESIGN.md 11.2).
+Memoized plans over this synthesis live in :mod:`repro.core.planner`.
 """
 from __future__ import annotations
 
@@ -35,6 +43,10 @@ class AdderGraph:
     matrix: np.ndarray                    # the (m, n) constant matrix realized
     nodes: list = field(default_factory=list)    # node i: (termA, termB)
     outputs: list = field(default_factory=list)  # output j: list of terms (sum)
+    # planner-shared graphs are priced many times; depth / value_bounds are
+    # pure functions of the final structure, so memoize them on the instance
+    # (populated lazily, never part of equality/repr)
+    _memo: dict = field(default_factory=dict, repr=False, compare=False)
 
     @property
     def n_adders(self) -> int:
@@ -47,6 +59,9 @@ class AdderGraph:
     @property
     def depth(self) -> int:
         """Adder-stage depth of the critical path (for the latency model)."""
+        cached = self._memo.get("depth")
+        if cached is not None:
+            return cached
         memo = {}
 
         def node_depth(v):
@@ -65,10 +80,14 @@ class AdderGraph:
             # remaining terms summed as a balanced tree
             tree = int(np.ceil(np.log2(max(1, len(terms)))))
             d = max(d, base + tree)
+        self._memo["depth"] = d
         return d
 
     def value_bounds(self, input_max: int = 255) -> list:
         """Max |value| each node/output can take — sizes adder bitwidths."""
+        cached = self._memo.get(("bounds", input_max))
+        if cached is not None:
+            return cached
         coeffs = {}  # var -> np.ndarray coefficient over inputs
 
         def coeff(v):
@@ -90,22 +109,23 @@ class AdderGraph:
             for t in terms:
                 c = c + coeff(t[0]) * (t[2] << t[1])
             bounds.append(int(np.abs(c).sum()) * input_max)
+        self._memo[("bounds", input_max)] = bounds
         return bounds
 
 
 def _csd_terms(matrix: np.ndarray) -> list:
-    """Expand each row of the constant matrix into signed shifted input terms."""
+    """Expand each row of the constant matrix into signed shifted input terms.
+
+    One array-CSD recoding of the whole matrix; ``argwhere`` on the
+    ``(row, input, digit)`` transpose yields the scalar loop's exact term
+    order (input k ascending, then digit position ascending)."""
     from . import csd
 
     m, n = matrix.shape
-    outputs = []
-    for j in range(m):
-        terms = []
-        for k in range(n):
-            for pos, d in enumerate(csd.to_csd(int(matrix[j, k]))):
-                if d != 0:
-                    terms.append((k, pos, d))
-        outputs.append(terms)
+    planes = csd.to_csd_array(matrix).transpose(1, 2, 0)   # (m, n, D)
+    outputs = [[] for _ in range(m)]
+    for j, k, pos in np.argwhere(planes):
+        outputs[j].append((int(k), int(pos), int(planes[j, k, pos])))
     return outputs
 
 
@@ -133,8 +153,111 @@ def _canonical_pair(t1, t2):
     return (a, b), base, sigma
 
 
-def synthesize(matrix, method: str = "cse") -> AdderGraph:
-    """Build a shift-add network for the CMVM ``y = matrix @ x``."""
+# packed canonical-key layout: (var << 7 | shift << 1 | sign>0) per term,
+# two terms side by side in one int64.  Packed-int ordering == the tuple
+# ordering (var, shift, sign) that _canonical_pair sorts by, because var is
+# most significant, shifts stay < 64, and sign maps -1 -> 0, +1 -> 1.
+_SHIFT_BITS = 6
+_TERM_BITS = 31
+_VAR_LIMIT = 1 << (_TERM_BITS - _SHIFT_BITS - 1)
+
+
+def _pair_keys_np(terms: list):
+    """Canonical keys of every (i < j) term pair of one output, vectorized.
+
+    Returns ``(keys, pi, pj)`` — int64 canonical pair keys in the scalar
+    loop's ``(i, jj)`` scan order plus the pair index arrays — or ``None``
+    when the output has fewer than two terms.
+    """
+    t = len(terms)
+    if t < 2:
+        return None
+    arr = np.asarray(terms, dtype=np.int64)          # (t, 3): var, shift, sign
+    var, sh, sg = arr[:, 0], arr[:, 1], arr[:, 2]
+    if int(var.max()) >= _VAR_LIMIT or int(sh.max()) >= (1 << _SHIFT_BITS):
+        raise OverflowError("term var/shift exceeds packed-key capacity")
+    packed = (var << (_SHIFT_BITS + 1)) | (sh << 1) | (sg > 0)
+    pi, pj = np.triu_indices(t, 1)                   # row-major == (i, jj) scan
+    swap = packed[pi] > packed[pj]
+    ai, bi = np.where(swap, pj, pi), np.where(swap, pi, pj)
+    va, sa, ga = var[ai], sh[ai], sg[ai]
+    vb, sb, gb = var[bi], sh[bi], sg[bi]
+    base = np.minimum(sa, sb)
+    sa, sb = sa - base, sb - base
+    sigma = np.where(ga < 0, -1, 1)
+    ga, gb = ga * sigma, gb * sigma
+    ka = (va << (_SHIFT_BITS + 1)) | (sa << 1) | (ga > 0)
+    kb = (vb << (_SHIFT_BITS + 1)) | (sb << 1) | (gb > 0)
+    return (ka << _TERM_BITS) | kb, pi, pj
+
+
+def _unpack_key(key: int) -> tuple:
+    """Packed int64 canonical key -> the ((var, shift, sign) x 2) tuple."""
+    def term(k):
+        return (int(k) >> (_SHIFT_BITS + 1),
+                (int(k) >> 1) & ((1 << _SHIFT_BITS) - 1),
+                1 if (int(k) & 1) else -1)
+    return term(key >> _TERM_BITS), term(key & ((1 << _TERM_BITS) - 1))
+
+
+def _most_common_pair_np(outputs: list):
+    """Batched pattern-count pass (DESIGN.md 11.2): canonical keys of every
+    output's pair grid, unique-counted once per output, aggregated with the
+    global first-occurrence position.  Returns ``((key_tuple, keys_per_out),
+    freq)`` with exactly ``Counter.most_common(1)``'s selection: max count,
+    ties to the first key encountered in the outputs-then-pairs scan."""
+    uniq_keys, uniq_pos, keys_per_out = [], [], []
+    offset = 0
+    for terms in outputs:
+        kp = _pair_keys_np(terms)
+        keys_per_out.append(kp)
+        if kp is None:
+            continue
+        keys, _, _ = kp
+        uk, first = np.unique(keys, return_index=True)  # seen-once-per-output
+        uniq_keys.append(uk)
+        uniq_pos.append(first + offset)
+        offset += len(keys)
+    if not uniq_keys:
+        return None, 0, keys_per_out
+    allk = np.concatenate(uniq_keys)
+    allp = np.concatenate(uniq_pos)
+    gk, inv = np.unique(allk, return_inverse=True)
+    counts = np.bincount(inv)
+    firstpos = np.full(len(gk), np.iinfo(np.int64).max, np.int64)
+    np.minimum.at(firstpos, inv, allp)
+    best = int(counts.max())
+    chosen = int(gk[np.where(counts == best, firstpos,
+                             np.iinfo(np.int64).max).argmin()])
+    return _unpack_key(chosen), best, keys_per_out
+
+
+def _most_common_pair_py(outputs: list):
+    """The seed's per-pattern ``Counter`` rescan — parity reference for the
+    batched pass (tests assert identical picks on random matrices)."""
+    counts = Counter()
+    for terms in outputs:
+        seen = set()
+        for i in range(len(terms)):
+            for jj in range(i + 1, len(terms)):
+                key, _, _ = _canonical_pair(terms[i], terms[jj])
+                if key not in seen:           # count once per output
+                    seen.add(key)
+                    counts[key] += 1
+    if not counts:
+        return None, 0
+    key, freq = counts.most_common(1)[0]
+    return key, freq
+
+
+def synthesize(matrix, method: str = "cse",
+               _pattern_engine: str = "np") -> AdderGraph:
+    """Build a shift-add network for the CMVM ``y = matrix @ x``.
+
+    ``_pattern_engine`` selects the CSE pattern-count pass: ``"np"`` (the
+    batched numpy pass) or ``"py"`` (the seed's Counter loop, the parity
+    reference).  Both produce bit-identical graphs.
+    """
     matrix = np.atleast_2d(np.asarray(matrix, dtype=np.int64))
     m, n = matrix.shape
     graph = AdderGraph(n_inputs=n, matrix=matrix)
@@ -145,29 +268,43 @@ def synthesize(matrix, method: str = "cse") -> AdderGraph:
         return graph
     if method != "cse":
         raise ValueError(method)
+    if _pattern_engine not in ("np", "py"):
+        raise ValueError(_pattern_engine)
 
     next_var = n
     while True:
-        counts = Counter()
-        for terms in outputs:
-            seen = set()
-            for i in range(len(terms)):
-                for jj in range(i + 1, len(terms)):
-                    key, _, _ = _canonical_pair(terms[i], terms[jj])
-                    if key not in seen:       # count once per output
-                        seen.add(key)
-                        counts[key] += 1
-        if not counts:
-            break
-        key, freq = counts.most_common(1)[0]
-        if freq < 2:
+        if _pattern_engine == "np":
+            key, freq, keys_per_out = _most_common_pair_np(outputs)
+        else:
+            key, freq = _most_common_pair_py(outputs)
+            keys_per_out = None
+        if key is None or freq < 2:
             break
         (a, b) = key
         graph.nodes.append((a, b))
         new_var = next_var
         next_var += 1
-        for terms in outputs:
+        packed_key = None
+        if keys_per_out is not None:
+            ka = (a[0] << (_SHIFT_BITS + 1)) | (a[1] << 1) | (a[2] > 0)
+            kb = (b[0] << (_SHIFT_BITS + 1)) | (b[1] << 1) | (b[2] > 0)
+            packed_key = (ka << _TERM_BITS) | kb
+        for oi, terms in enumerate(outputs):
             # replace the first occurrence of the pattern in each output
+            if keys_per_out is not None:
+                kp = keys_per_out[oi]
+                if kp is None:
+                    continue
+                keys, pi, pj = kp
+                hits = np.nonzero(keys == packed_key)[0]
+                if len(hits) == 0:
+                    continue
+                i, jj = int(pi[hits[0]]), int(pj[hits[0]])
+                _, base, sigma = _canonical_pair(terms[i], terms[jj])
+                rest = [terms[x] for x in range(len(terms))
+                        if x not in (i, jj)]
+                terms[:] = rest + [(new_var, base, sigma)]
+                continue
             done = False
             for i in range(len(terms)):
                 if done:

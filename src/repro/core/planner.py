@@ -1,0 +1,98 @@
+"""Shared adder-graph planner — the memoized synthesis front-end (DESIGN.md 11.3).
+
+Every multiplierless consumer used to re-run :func:`repro.core.mcm.synthesize`
+per column on every call: ``archs.design_cost`` synthesizes a layer's CAVM
+columns, then ``simurg.generate`` synthesizes the *same* columns again for the
+Verilog, and the paper-table pipeline prices the same tuned networks across
+several tables/figures.  The planner closes that: one process-wide cache of
+finished :class:`~repro.core.mcm.AdderGraph`s keyed by canonicalized matrix
+content, shared by every consumer.
+
+Keys are ``(method, shape, int64-C-contiguous bytes)`` — the canonical form of
+the matrix *content* (dtype- and layout-normalized), so a column reappearing
+in any consumer, any call, any dtype hits the same plan.  Graphs are returned
+by reference and must be treated as immutable (every consumer only reads);
+their ``depth``/``value_bounds`` memos accumulate on the shared instance, so
+repeat pricing is cache-resident too.
+
+The convenience wrappers mirror the paper's Section V operation shapes:
+``cavm_graphs`` (per-neuron shift-add, one (1, n) plan per column),
+``cmvm_graph`` (per-layer shared shift-add, the (m, n) transpose plan), and
+``mcm_graph`` (one variable times m constants, an (m, 1) plan).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import mcm
+
+__all__ = ["SynthesisPlanner", "default_planner", "plan", "cavm_graphs",
+           "cmvm_graph", "mcm_graph"]
+
+
+class SynthesisPlanner:
+    """Memoized front-end over :func:`repro.core.mcm.synthesize`."""
+
+    def __init__(self):
+        self._cache: dict = {}
+        self.stats = {"hits": 0, "misses": 0}
+
+    def plan(self, matrix, method: str = "cse") -> mcm.AdderGraph:
+        """The (cached) shift-add plan for ``y = matrix @ x``."""
+        matrix = np.ascontiguousarray(
+            np.atleast_2d(np.asarray(matrix, dtype=np.int64)))
+        key = (method, matrix.shape, matrix.tobytes())
+        graph = self._cache.get(key)
+        if graph is None:
+            graph = mcm.synthesize(matrix, method)
+            self._cache[key] = graph
+            self.stats["misses"] += 1
+        else:
+            self.stats["hits"] += 1
+        return graph
+
+    # -- Section V operation shapes ---------------------------------------
+
+    def cavm_graphs(self, w, method: str = "cse") -> list:
+        """Per-output-column CAVM plans of a layer's (n_in, n_out) weights."""
+        w = np.asarray(w, dtype=np.int64)
+        return [self.plan(w[:, m][None, :], method)
+                for m in range(w.shape[1])]
+
+    def cmvm_graph(self, w, method: str = "cse") -> mcm.AdderGraph:
+        """The layer-shared CMVM plan: realize ``w.T @ x`` as one block."""
+        return self.plan(np.asarray(w, dtype=np.int64).T, method)
+
+    def mcm_graph(self, constants, method: str = "cse") -> mcm.AdderGraph:
+        """MCM plan: m constants times one variable — an (m, 1) matrix."""
+        consts = np.asarray(constants, dtype=np.int64).ravel()
+        if consts.size == 0:
+            consts = np.asarray([1], dtype=np.int64)
+        return self.plan(consts[:, None], method)
+
+    def clear(self) -> None:
+        self._cache.clear()
+        self.stats = {"hits": 0, "misses": 0}
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+
+#: The process-wide planner every consumer shares by default.
+default_planner = SynthesisPlanner()
+
+
+def plan(matrix, method: str = "cse") -> mcm.AdderGraph:
+    return default_planner.plan(matrix, method)
+
+
+def cavm_graphs(w, method: str = "cse") -> list:
+    return default_planner.cavm_graphs(w, method)
+
+
+def cmvm_graph(w, method: str = "cse") -> mcm.AdderGraph:
+    return default_planner.cmvm_graph(w, method)
+
+
+def mcm_graph(constants, method: str = "cse") -> mcm.AdderGraph:
+    return default_planner.mcm_graph(constants, method)

@@ -21,8 +21,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from . import mcm
 from .archs import BITS_X, DesignReport, design_cost
+from .planner import default_planner as planner
 from .hwmodel import acc_bits
 from .intmlp import FRAC, IntMLP, forward_int
 
@@ -100,10 +100,9 @@ def _layer_parallel(k: int, w, b, act, q: int, style: str, lines: list) -> None:
             lines.append(f"  wire signed [{abits-1}:0] y{k}_{m} = "
                          + " + ".join(prods) + ";")
     else:
-        matrix = w.T if style == "cmvm" else None
-        graphs = ([mcm.synthesize(w.T, "cse")] if style == "cmvm"
-                  else [mcm.synthesize(w[:, m][None, :], "cse")
-                        for m in range(n_out)])
+        # same shared plans design_cost priced — no re-synthesis for the RTL
+        graphs = ([planner.cmvm_graph(w)] if style == "cmvm"
+                  else planner.cavm_graphs(w))
         out_idx = 0
         for gi, g in enumerate(graphs):
             pfx = f"n{k}_{gi}"

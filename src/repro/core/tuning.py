@@ -81,6 +81,11 @@ def tune_parallel(mlp: IntMLP, x_val_int: np.ndarray, y_val: np.ndarray,
     replaced_total = 0
     sweeps = 0
     log = []
+    # tnzd ledger (DESIGN.md 11.1): one array recoding up front, then the
+    # paper's hardware-cost proxy is maintained through per-candidate nnz
+    # deltas — no full recount per sweep (parity asserted in tests).
+    tnzd0 = csd.tnzd(list(ev.mlp.weights) + list(ev.mlp.biases))
+    tnzd_running = tnzd0
     while sweeps < max_sweeps:                      # step 3 loop
         sweeps += 1
         replaced_this_sweep = 0
@@ -89,10 +94,13 @@ def tune_parallel(mlp: IntMLP, x_val_int: np.ndarray, y_val: np.ndarray,
             flat = w.ravel()
             # Candidate values are fixed at layer entry: a commit only ever
             # rewrites the committed index itself, which is never revisited
-            # this sweep, so the serial visit-time values are these.
-            cands = [Candidate(k, idx % n_out, idx // n_out,
-                               csd.drop_least_significant_digit(v))
-                     for idx, v in enumerate(int(x) for x in flat) if v != 0]
+            # this sweep, so the serial visit-time values are these.  One
+            # whole-column array recoding yields every alternative value at
+            # once (step 2a, vectorized).
+            alts = csd.drop_least_significant_digit_array(flat)
+            nz = np.nonzero(flat)[0]
+            cands = [Candidate(k, int(idx) % n_out, int(idx) // n_out,
+                               int(alts[idx])) for idx in nz]
             # Chain scan: one device call follows the serial greedy chain
             # through the whole chunk — candidate c is scored against the
             # prefix state with every earlier accept applied, so all chunk
@@ -109,6 +117,8 @@ def tune_parallel(mlp: IntMLP, x_val_int: np.ndarray, y_val: np.ndarray,
                 if accepted:
                     ev.commit_many(accepted)
                     replaced_this_sweep += len(accepted)
+                    # each accept drops exactly one nonzero CSD digit
+                    tnzd_running -= len(accepted)
                 pos += len(batch)
         replaced_total += replaced_this_sweep
         log.append((sweeps, replaced_this_sweep, bha))
@@ -116,7 +126,8 @@ def tune_parallel(mlp: IntMLP, x_val_int: np.ndarray, y_val: np.ndarray,
             break
     return TuneResult(mlp=ev.mlp, bha=bha, initial_ha=initial,
                       replacements=replaced_total, sweeps=sweeps, log=log,
-                      stats=dict(ev.stats, backend=ev.backend))
+                      stats=dict(ev.stats, backend=ev.backend,
+                                 tnzd_initial=tnzd0, tnzd_final=tnzd_running))
 
 
 def _tune_parallel_serial(mlp: IntMLP, x_val_int: np.ndarray,
@@ -160,9 +171,9 @@ def _tune_parallel_serial(mlp: IntMLP, x_val_int: np.ndarray,
 
 def sls_of(values) -> int:
     """Smallest left shift among a set of integer weights (zeros ignored)."""
-    lls = [csd.largest_left_shift(int(v)) for v in np.asarray(values).ravel()
-           if int(v) != 0]
-    return min(lls) if lls else 0
+    v = np.asarray(values, dtype=np.int64).ravel()
+    v = v[v != 0]
+    return int(csd.largest_left_shift_array(v).min()) if v.size else 0
 
 
 def _bitwidth(v: int) -> int:

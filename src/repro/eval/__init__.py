@@ -19,8 +19,9 @@ Both offer an int32-safe jax backend (auto-demoting to int64 numpy) and
 optional ``shard_map`` data-parallel sharding of the validation rows.
 """
 from .batched import (BatchedHWEvaluator, Candidate,  # noqa: F401
-                      QSweepEvaluator, TMStep, ha_pct, int32_safe_bound,
-                      net_int32_safe)
+                      QSweepEvaluator, TMStep, csd_net_int32_safe, ha_pct,
+                      int32_safe_bound, net_int32_safe)
 
 __all__ = ["BatchedHWEvaluator", "Candidate", "QSweepEvaluator", "TMStep",
-           "ha_pct", "int32_safe_bound", "net_int32_safe"]
+           "ha_pct", "int32_safe_bound", "net_int32_safe",
+           "csd_net_int32_safe"]

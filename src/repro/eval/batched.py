@@ -55,7 +55,8 @@ import numpy as np
 from repro.core.intmlp import ACT_MAX, FRAC, IntMLP, act_requant
 
 __all__ = ["Candidate", "BatchedHWEvaluator", "QSweepEvaluator", "TMStep",
-           "ha_pct", "int32_safe_bound", "net_int32_safe"]
+           "ha_pct", "int32_safe_bound", "net_int32_safe",
+           "csd_net_accum_bound", "csd_net_int32_safe"]
 
 _NEG = -(1 << 30)      # impossible score: marks padded rows as never-correct
 _SMALL_CHUNK = 16      # secondary jit size for commit-heavy scan phases
@@ -145,6 +146,33 @@ def net_int32_safe(mlp: IntMLP) -> bool:
     past the int32 bound are scored on the host path while the rest of the
     batch stays on device."""
     return net_accum_bound(mlp) < 2 ** 31
+
+
+def csd_net_accum_bound(mlp: IntMLP) -> int:
+    """Worst-case |accumulator| of the network on the *digit-plane* datapath
+    (DESIGN.md 11.4).  The shift-add kernels accumulate ``x @ p_d << d``
+    plane by plane, so the intermediates are bounded by the CSD
+    absolute-digit reconstruction ``sum_i |d_i| 2^i`` of each weight —
+    up to ~4/3 of |w| (e.g. |7| -> 1 + 8 = 9) — not by |w| itself; the
+    pallas sweep backend demotes per network on this tighter bound."""
+    from repro.core.csd import from_csd_array, to_csd_array
+    amax = 1 << FRAC
+    worst = 0
+    for w, b in zip(mlp.weights, mlp.biases):
+        w = np.asarray(w, dtype=np.int64)
+        if w.size:
+            wabs = from_csd_array(np.abs(to_csd_array(w)))
+            col_sum = int(wabs.sum(axis=0).max())
+        else:
+            col_sum = 0
+        bmax = int(np.abs(np.asarray(b, dtype=np.int64)).max()) if b.size else 0
+        worst = max(worst, col_sum * amax + (bmax << FRAC))
+    return worst
+
+
+def csd_net_int32_safe(mlp: IntMLP) -> bool:
+    """Per-network demotion bound of the pallas (digit-plane) sweep backend."""
+    return csd_net_accum_bound(mlp) < 2 ** 31
 
 
 # float integer-exactness limits: every product and (blocked/FMA) partial
@@ -899,18 +927,21 @@ class QSweepEvaluator:
 
     Backends: ``numpy`` (host: stacked BLAS matmuls in float32 below the
     2^24 accumulator bound, float64 below 2^53 — both exact-integer — and
-    per-network int64 loops past that) and ``jnp`` (int32, jitted per
-    (structure, activations, padded batch size)).  ``auto`` resolves to
-    ``numpy`` on CPU hosts (BLAS beats XLA's int32 matmuls there) and to
-    ``jnp`` on accelerators; ``pallas`` resolves to ``jnp`` too — sweep
-    batches stack a different weight matrix per network, so there is no
-    per-layer CSD plane to cache, and the int32 ``dot_general`` path is the
-    exact integer datapath here (DESIGN.md 10).  Demotion is per *network*,
-    by the mutation-free accumulator bound (:func:`net_accum_bound` /
-    :func:`net_int32_safe` — typically only the highest q levels of a sweep
-    leave the fast tier), never per batch.  ``shard=True`` shards
-    validation rows across devices exactly like the mutation engine
-    (DESIGN.md 7.4).
+    per-network int64 loops past that), ``jnp`` (int32, jitted per
+    (structure, activations, padded batch size)), and ``pallas`` — the
+    digit-plane sweep mode (DESIGN.md 11.4): every network's weights expand
+    to CSD planes at a shared per-layer depth and all q levels run the
+    bit-exact shift-add ASIC datapath through the ``csd_qsweep`` kernel in
+    one dispatch.  ``auto`` resolves to ``numpy`` on CPU hosts (BLAS beats
+    XLA's int32 matmuls there) and to ``jnp`` on accelerators (the MXU
+    matmul tier; pick ``pallas`` explicitly when the sweep must exercise
+    the shift-add datapath itself).  Demotion is per *network*, by the
+    mutation-free accumulator bound (:func:`net_accum_bound` /
+    :func:`net_int32_safe`; the pallas backend uses the tighter CSD
+    absolute-digit bound :func:`csd_net_int32_safe` — typically only the
+    highest q levels of a sweep leave the fast tier), never per batch.
+    ``shard=True`` shards validation rows across devices exactly like the
+    mutation engine (DESIGN.md 7.4).
 
     Usage (the sweep consumers' contract)::
 
@@ -930,14 +961,16 @@ class QSweepEvaluator:
         if backend in ("auto", "jnp", "pallas"):
             try:
                 import jax
-                if backend == "auto" and jax.default_backend() == "cpu":
+                jax.devices()
+                if backend == "auto":
                     # on CPU hosts the stacked BLAS-float64 path (exact below
                     # 2^53) beats XLA's int32 matmuls — DESIGN.md 10
-                    self.backend = "numpy"
+                    self.backend = ("numpy" if jax.default_backend() == "cpu"
+                                    else "jnp")
                 else:
-                    self.backend = "jnp"
-            except Exception:                          # pragma: no cover
-                self.backend = "numpy"
+                    self.backend = backend    # jnp, or the digit-plane
+            except Exception:                 # pallas sweep mode (11.4)
+                self.backend = "numpy"        # pragma: no cover
         else:
             self.backend = "numpy"
 
@@ -987,7 +1020,9 @@ class QSweepEvaluator:
             if self.backend == "numpy":
                 out[lo:lo + len(chunk)] = self._counts_np(chunk)
             else:
-                safe = [i for i, m in enumerate(chunk) if net_int32_safe(m)]
+                is_safe = (csd_net_int32_safe if self.backend == "pallas"
+                           else net_int32_safe)
+                safe = [i for i, m in enumerate(chunk) if is_safe(m)]
                 unsafe = [i for i in range(len(chunk)) if i not in safe]
                 if unsafe:                 # per-level demotion (DESIGN.md 10)
                     self.stats["demoted"] += len(unsafe)

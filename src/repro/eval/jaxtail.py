@@ -18,7 +18,12 @@ For the sweep engine (``QSweepEvaluator``): ``QSweepJax`` holds the device
 mirrors of the validation rows and one jitted stacked forward per
 (structure, activations, padded batch size) — a batched int32 ``dot_general``
 per layer over the ``(Q, M, n)`` network stack, per-network array-q
-requantization, and the same unique-score counts (DESIGN.md 10).
+requantization, and the same unique-score counts (DESIGN.md 10).  On the
+``pallas`` backend the per-layer stacked matmul runs through the
+``csd_qsweep`` digit-plane kernel instead — every network's weights expanded
+to CSD planes at a shared depth, all q levels through the bit-exact
+shift-add datapath in one dispatch (DESIGN.md 11.4); the jit key then also
+carries the per-layer plane depths.
 """
 from __future__ import annotations
 
@@ -97,7 +102,7 @@ class JaxState:
             self.slab = self._put_row(ev._slab.astype(np.int32))
 
     def _need_planes(self, k: int) -> None:
-        from repro.kernels.csd_matvec import csd_expand
+        from repro.kernels import csd_expand
         for l in range(k + 2, len(self.ev._mlp.weights)):
             if self._planes[l] is None:
                 self._planes[l] = self._put_rep(
@@ -351,7 +356,9 @@ class QSweepJax:
     def qsweep_counts(self, mlps) -> np.ndarray:
         """Exact correct counts of the int32-safe networks in one jitted
         stacked forward.  Batches are padded (with copies of the first
-        network) to a stable size so jit keys stay per-structure."""
+        network) to a stable size so jit keys stay per-structure.  On the
+        ``pallas`` backend the per-layer weight stacks ride as CSD digit
+        planes (shared depth per layer) through ``csd_qsweep``."""
         n = len(mlps)
         qpad = 1 if n == 1 else max(n, self.ev.qchunk)
         padded = list(mlps) + [mlps[0]] * (qpad - n)
@@ -359,13 +366,23 @@ class QSweepJax:
         # forward_int zips: surplus activation entries never run
         acts = tuple(mlps[0].activations[:n_layers])
         shapes = tuple(w.shape for w in mlps[0].weights)
-        fn = self._fns.get((shapes, acts, qpad))
+        if self.ev.backend == "pallas":
+            from repro.kernels import csd_expand_stack
+            Ws_np = [csd_expand_stack([m.weights[l] for m in padded])
+                     for l in range(n_layers)]
+            depths = tuple(p.shape[1] for p in Ws_np)
+            key = (shapes, acts, qpad, "pallas", depths)
+        else:
+            Ws_np = [np.stack([np.asarray(m.weights[l], np.int64)
+                               for m in padded]).astype(np.int32)
+                     for l in range(n_layers)]
+            depths = None
+            key = (shapes, acts, qpad)
+        fn = self._fns.get(key)
         if fn is None:
-            fn = self._build_qsweep(acts, qpad)
-            self._fns[(shapes, acts, qpad)] = fn
-        Ws = tuple(jax.device_put(jnp.asarray(np.stack(
-            [np.asarray(m.weights[l], np.int64) for m in padded]
-        ).astype(np.int32)), self._rep) for l in range(n_layers))
+            fn = self._build_qsweep(acts, qpad, pallas=depths is not None)
+            self._fns[key] = fn
+        Ws = tuple(jax.device_put(jnp.asarray(w), self._rep) for w in Ws_np)
         bshs = tuple(jax.device_put(jnp.asarray((np.stack(
             [np.asarray(m.biases[l], np.int64) for m in padded]
         ) << FRAC).astype(np.int32)), self._rep) for l in range(n_layers))
@@ -373,19 +390,23 @@ class QSweepJax:
         out = fn(self.x, self.lab, self.lab_safe, qs, Ws, bshs)
         return np.asarray(out)[:n].astype(np.int64)
 
-    def _build_qsweep(self, acts, qpad: int):
+    def _build_qsweep(self, acts, qpad: int, pallas: bool = False):
         ev = self.ev
         n_layers = len(acts)
         q_dims = (((2,), (1,)), ((0,), (0,)))   # (Q,M,i) @ (Q,i,o) -> (Q,M,o)
         sharded = ev._mesh is not None
 
         def core(x, lab, lab_safe, qs, Ws, bshs):
-            n_out = Ws[-1].shape[2]
+            n_out = Ws[-1].shape[-1]
             a = jnp.broadcast_to(x[None], (qpad,) + x.shape)
             qcol = qs[:, None, None]
             for l in range(n_layers):
-                acc = jax.lax.dot_general(
-                    a, Ws[l], q_dims, preferred_element_type=jnp.int32)
+                if pallas:          # stacked shift-add datapath (11.4)
+                    from repro.kernels.ops import csd_qsweep
+                    acc = csd_qsweep(a, Ws[l])
+                else:
+                    acc = jax.lax.dot_general(
+                        a, Ws[l], q_dims, preferred_element_type=jnp.int32)
                 acc = acc + bshs[l][:, None, :]
                 a = _act_requant(acc, acts[l], qcol)
             pen = n_out - 1 - jnp.arange(n_out, dtype=jnp.int32)

@@ -1,43 +1,50 @@
-"""Pallas TPU kernel: CSD shift-add CAVM evaluation (bit-exact ASIC datapath).
+"""Pallas TPU kernels: CSD shift-add CAVM evaluation (bit-exact ASIC datapath).
 
 The paper's multiplierless designs (Section V) evaluate y = C @ x as planes of
-+-shifted adds over the CSD digits of C.  This kernel executes exactly that
++-shifted adds over the CSD digits of C.  These kernels execute exactly that
 decomposition — weight matrix expanded into D digit planes p_d in {-1,0,1},
 y = sum_d (x @ p_d) << d — so the framework can simulate the synthesized
 hardware's integer arithmetic at tensor speed (e.g. hardware-accuracy
 evaluation inside the tuning loops for large validation sets).
 
+Two kernels:
+
+* ``csd_matvec_kernel`` — one network: (M, K) activations x (D, K, N) planes.
+* ``csd_qsweep_kernel`` — the sweep mode (DESIGN.md 11.4): Q stacked networks
+  (e.g. the same float weights quantized at Q candidate q levels), activations
+  (Q, M, K) x planes (Q, D, K, N), one dispatch for every q level — the
+  digit-plane twin of the sweep engine's stacked ``dot_general`` forwards.
+
 On a real TPU the MXU int8 path (qmatmul) beats digit planes for dense math;
-this kernel's value is bit-exact *hardware simulation*, not TPU roofline
-(DESIGN.md 2.4).  Grid: (M/bm, N/bn); the D digit planes are accumulated
-inside the kernel body with shifts applied as exact integer scaling.
+these kernels' value is bit-exact *hardware simulation*, not TPU roofline
+(DESIGN.md 2.4).  Grid: (M/bm, N/bn) (+ a leading Q dimension for the sweep
+kernel); the D digit planes are accumulated inside the kernel body with
+shifts applied as exact integer scaling.
+
+``csd_expand`` is re-exported here for backward compatibility only — the
+public path is :mod:`repro.kernels` (``repro.kernels.ops``), which backs it
+with the whole-array CSD recoder (DESIGN.md 11.1).
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core import csd
+__all__ = ["csd_expand", "csd_matvec_kernel", "csd_matvec",
+           "csd_qsweep_kernel"]
 
-__all__ = ["csd_expand", "csd_matvec_kernel", "csd_matvec"]
 
-
-def csd_expand(w_int: np.ndarray):
-    """(n, m) integer matrix -> (D, n, m) int8 digit planes, LSB first."""
-    w_int = np.asarray(w_int, dtype=np.int64)
-    digits = [[csd.to_csd(int(v)) for v in row] for row in w_int]
-    D = max((len(d) for row in digits for d in row), default=1)
-    D = max(D, 1)
-    planes = np.zeros((D,) + w_int.shape, dtype=np.int8)
-    for i, row in enumerate(digits):
-        for j, ds in enumerate(row):
-            for k, d in enumerate(ds):
-                planes[k, i, j] = d
-    return planes
+def csd_expand(w_int):
+    """Deprecated import path — use :func:`repro.kernels.csd_expand`."""
+    warnings.warn("repro.kernels.csd_matvec.csd_expand is deprecated; "
+                  "import csd_expand from repro.kernels",
+                  DeprecationWarning, stacklevel=2)
+    from repro.kernels.ops import csd_expand as _expand
+    return _expand(w_int)
 
 
 def _kernel(x_ref, p_ref, o_ref, *, n_digits: int):
@@ -77,3 +84,43 @@ def csd_matvec_kernel(x_int, planes, *, bm: int = 128, bn: int = 128,
 
 
 csd_matvec = csd_matvec_kernel
+
+
+def _qsweep_kernel(x_ref, p_ref, o_ref, *, n_digits: int):
+    x = x_ref[0].astype(jnp.int32)
+    acc = jnp.zeros(o_ref.shape[1:], jnp.int32)
+    for d in range(n_digits):        # static unroll: one MXU pass per plane
+        plane = p_ref[0, d].astype(jnp.int32)
+        acc += jax.lax.dot_general(
+            x, plane,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32) << d
+    o_ref[0] = acc
+
+
+def csd_qsweep_kernel(x_int, planes, *, bm: int = 128, bn: int = 128,
+                      interpret: bool = False):
+    """y[q, b, j] = sum_d sum_k (x[q,b,k] * planes[q,d,k,j]) << d (int32).
+
+    The sweep-mode digit-plane matvec (DESIGN.md 11.4): x_int is a (Q, M, K)
+    int32 stack of per-network activations, planes a (Q, D, K, N) int8 stack
+    of per-network CSD digit planes (each network's planes zero-padded to the
+    common depth D).  One grid dimension per network: every q level of a
+    sweep runs through the shift-add datapath in a single dispatch.
+    """
+    Q, M, K = x_int.shape
+    Q2, D, K2, N = planes.shape
+    assert Q == Q2 and K == K2 and M % bm == 0 and N % bn == 0, \
+        (x_int.shape, planes.shape)
+    grid = (Q, M // bm, N // bn)
+    return pl.pallas_call(
+        functools.partial(_qsweep_kernel, n_digits=D),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, K), lambda q, m, n: (q, m, 0)),
+            pl.BlockSpec((1, D, K, bn), lambda q, m, n: (q, 0, 0, n)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda q, m, n: (q, m, n)),
+        out_shape=jax.ShapeDtypeStruct((Q, M, N), jnp.int32),
+        interpret=interpret,
+    )(x_int, planes)

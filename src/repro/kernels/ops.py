@@ -14,10 +14,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
-from .csd_matvec import csd_expand, csd_matvec_kernel
+from .csd_matvec import csd_matvec_kernel, csd_qsweep_kernel
 from .qmatmul import qmatmul_kernel
 
-__all__ = ["qmatmul", "csd_matvec", "quantize_pot", "csd_expand"]
+__all__ = ["qmatmul", "csd_matvec", "csd_qsweep", "quantize_pot",
+           "csd_expand", "csd_expand_stack"]
+
+
+def csd_expand(w_int, depth: int | None = None) -> np.ndarray:
+    """(n, m) integer matrix -> (D, n, m) int8 CSD digit planes, LSB first.
+
+    The single public digit-plane expansion (``repro.kernels`` is the
+    canonical import path; the old ``kernels.csd_matvec.csd_expand`` is a
+    deprecation shim).  Backed by the whole-array CSD recoder
+    (``repro.core.csd.to_csd_array``, DESIGN.md 11.1) — bit-identical to the
+    seed's per-value recoding loop.  ``depth`` pads the plane stack to a
+    common D (the sweep kernel's per-network stacking needs aligned depths).
+    """
+    from repro.core.csd import to_csd_array
+    return to_csd_array(np.asarray(w_int, dtype=np.int64), depth=depth)
+
+
+def csd_expand_stack(ws) -> np.ndarray:
+    """Q same-shape integer matrices -> one (Q, D, n, m) int8 plane stack at
+    the shared depth D = max over the batch — :func:`csd_qsweep`'s input
+    contract (zero planes pad the shallower networks, adding nothing)."""
+    per = [csd_expand(w) for w in ws]
+    depth = max(p.shape[0] for p in per)
+    return np.stack([np.pad(p, ((0, depth - p.shape[0]),) + ((0, 0),) * 2)
+                     for p in per])
 
 
 def _on_tpu() -> bool:
@@ -77,3 +102,25 @@ def csd_matvec(x_int, w_int=None, planes=None, *, bm: int = 128,
     y = csd_matvec_kernel(xq, pq, bm=min(bm, xq.shape[0]), bn=bn,
                           interpret=interpret)
     return y[:M, :N]
+
+
+def csd_qsweep(x_int, planes, *, bm: int = 128, bn: int = 128,
+               interpret: bool | None = None):
+    """Sweep-mode shift-add matvec: y[q] = x[q] @ W[q] via stacked CSD digit
+    planes, every q level in one dispatch (DESIGN.md 11.4).
+
+    ``x_int``: (Q, M, K) int32 per-network activations; ``planes``:
+    (Q, D, K, N) int8 per-network digit planes at a shared depth D (zero-pad
+    shallower networks — zero planes add nothing).  Exact int32, like
+    :func:`csd_matvec`, provided every network satisfies the sweep engine's
+    CSD accumulator bound (``repro.eval.batched.csd_net_accum_bound``).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    Q, M, K = x_int.shape
+    N = planes.shape[3]
+    xq = _pad_to(x_int.astype(jnp.int32), bm, 1)
+    pq = _pad_to(planes, bn, 3)
+    y = csd_qsweep_kernel(xq, pq, bm=min(bm, xq.shape[1]), bn=bn,
+                          interpret=interpret)
+    return y[:, :M, :N]

@@ -75,3 +75,123 @@ def test_mcm_is_cmvm_single_column():
     g = mcm.synthesize(consts, "cse")
     x = np.arange(-8, 8).reshape(-1, 1)
     np.testing.assert_array_equal(mcm.evaluate(g, x), x @ consts.T)
+
+
+# ---------------------------------------------------------------------------
+# Array-CSD engine vs the scalar reference (DESIGN.md 11.1)
+# ---------------------------------------------------------------------------
+
+# full valid domain of the array engine, so the digit-plane depth limit
+# (D = 62 planes at |v| ~ 2^61) is exercised, negatives and zero included
+_domain = st.integers(-(2**61) + 1, 2**61 - 1)
+
+
+@given(st.lists(_domain, min_size=1, max_size=40))
+def test_array_csd_roundtrip_and_scalar_parity(vs):
+    arr = np.asarray(vs, dtype=np.int64)
+    planes = csd.to_csd_array(arr)
+    assert planes.dtype == np.int8
+    np.testing.assert_array_equal(csd.from_csd_array(planes), arr)
+    # plane stacks match the scalar digit lists exactly (zero-padded)
+    for i, v in enumerate(vs):
+        digits = csd.to_csd(v)
+        assert planes.shape[0] >= len(digits)
+        ref = np.zeros(planes.shape[0], np.int8)
+        ref[:len(digits)] = digits
+        np.testing.assert_array_equal(planes[:, i], ref)
+
+
+@given(st.lists(_domain, min_size=1, max_size=40))
+def test_array_csd_adjacency_and_minimality(vs):
+    arr = np.asarray(vs, dtype=np.int64)
+    planes = csd.to_csd_array(arr)
+    # CSD invariant: no two adjacent nonzero digits, anywhere in the array
+    assert not ((planes[:-1] != 0) & (planes[1:] != 0)).any()
+    # minimality: never more nonzero digits than plain binary
+    nnzs = csd.nnz_array(arr)
+    for v, k in zip(vs, nnzs):
+        assert k == csd.nnz(v)
+        assert k <= bin(abs(v)).count("1")
+
+
+@given(st.lists(_domain, min_size=1, max_size=40))
+def test_array_helpers_match_scalar(vs):
+    arr = np.asarray(vs, dtype=np.int64)
+    np.testing.assert_array_equal(
+        csd.drop_least_significant_digit_array(arr),
+        [csd.drop_least_significant_digit(v) for v in vs])
+    np.testing.assert_array_equal(
+        csd.largest_left_shift_array(arr),
+        [csd.largest_left_shift(v) for v in vs])
+    assert csd.tnzd([arr]) == csd.tnzd([arr], engine="scalar")
+
+
+def test_array_csd_edges():
+    """Zero, +-1, and values at the digit-plane depth limit."""
+    edge = np.asarray([0, 1, -1, 2, -2, 3, -3,
+                       2**61 - 1, -(2**61) + 1, 2**60, -(2**60)], np.int64)
+    planes = csd.to_csd_array(edge)
+    np.testing.assert_array_equal(csd.from_csd_array(planes), edge)
+    assert csd.to_csd_array(np.zeros((3, 2), np.int64)).shape == (1, 3, 2)
+    with pytest.raises(OverflowError):
+        csd.to_csd_array(np.asarray([1 << 61]))
+    with pytest.raises(ValueError):
+        csd.to_csd_array(np.asarray([255]), depth=3)   # needs 9 planes
+    assert csd.to_csd_array(np.asarray([3]), depth=8).shape == (8, 1)
+
+
+# ---------------------------------------------------------------------------
+# Batched CSE pattern counting vs the Counter reference (DESIGN.md 11.2)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 10**4))
+def test_cse_pattern_engines_identical(m, n, seed):
+    """The batched numpy pattern-count pass picks exactly the patterns the
+    seed's Counter rescan picked — graphs match node for node (the property
+    that keeps adder counts and SIMURG Verilog bit-identical)."""
+    rng = np.random.default_rng(seed)
+    M = rng.integers(-255, 256, (m, n))
+    g_np = mcm.synthesize(M, "cse", _pattern_engine="np")
+    g_py = mcm.synthesize(M, "cse", _pattern_engine="py")
+    assert g_np.nodes == g_py.nodes
+    assert g_np.outputs == g_py.outputs
+
+
+# ---------------------------------------------------------------------------
+# Shared adder-graph planner (DESIGN.md 11.3)
+# ---------------------------------------------------------------------------
+
+def test_planner_memoizes_by_content():
+    from repro.core.planner import SynthesisPlanner
+    p = SynthesisPlanner()
+    rng = np.random.default_rng(3)
+    w = rng.integers(-127, 128, (8, 4)).astype(np.int64)
+    graphs = p.cavm_graphs(w)
+    assert p.stats == {"hits": 0, "misses": 4}
+    again = p.cavm_graphs(w.astype(np.int32))       # dtype-normalized key
+    assert p.stats == {"hits": 4, "misses": 4}
+    assert all(a is b for a, b in zip(graphs, again))   # shared instances
+    g = p.cmvm_graph(w)
+    assert g is p.plan(w.T)                         # same canonical content
+    x = rng.integers(-128, 128, (16, 8))
+    np.testing.assert_array_equal(mcm.evaluate(g, x), x @ w)
+
+
+def test_planner_backed_costs_match_direct_synthesis():
+    """design_cost through the planner == a fresh uncached synthesis."""
+    from repro.core.archs import design_cost
+    from repro.core.intmlp import IntMLP
+    from repro.core.planner import default_planner
+    rng = np.random.default_rng(5)
+    w = rng.integers(-63, 64, (8, 5)).astype(np.int64)
+    b = rng.integers(-7, 8, (5,)).astype(np.int64)
+    mlp = IntMLP([w], [b], ["hsig"], q=4)
+    default_planner.clear()
+    cold = design_cost(mlp, "parallel", "cavm")
+    warm = design_cost(mlp, "parallel", "cavm")     # fully cache-served
+    assert default_planner.stats["hits"] >= 5
+    assert (cold.area_um2, cold.n_adders, cold.latency_ns) == \
+        (warm.area_um2, warm.n_adders, warm.latency_ns)
+    direct = [mcm.synthesize(w[:, m][None, :], "cse") for m in range(5)]
+    assert sum(g.n_adders for g in direct) + 5 == cold.n_adders  # + bias adds

@@ -7,7 +7,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels import csd_expand, csd_matvec, qmatmul, quantize_pot
+from repro.kernels import (csd_expand, csd_expand_stack, csd_matvec,
+                           csd_qsweep, qmatmul, quantize_pot)
 from repro.kernels import ref as kref
 
 RNG = np.random.default_rng(0)
@@ -82,6 +83,65 @@ def test_csd_planes_are_valid_csd():
     recon = sum((planes[d].astype(np.int64) << d)
                 for d in range(planes.shape[0]))
     np.testing.assert_array_equal(recon, W)
+
+
+def test_csd_expand_matches_scalar_recoder():
+    """The array-backed expansion (repro.kernels public path) is
+    bit-identical to stacking the scalar to_csd digit lists."""
+    from repro.core import csd as C
+    W = RNG.integers(-255, 256, (16, 10))
+    planes = csd_expand(W)
+    digits = [[C.to_csd(int(v)) for v in row] for row in W]
+    D = max((len(d) for row in digits for d in row), default=1)
+    ref = np.zeros((max(D, 1),) + W.shape, np.int8)
+    for i, row in enumerate(digits):
+        for j, ds in enumerate(row):
+            ref[:len(ds), i, j] = ds
+    np.testing.assert_array_equal(planes, ref)
+    # depth pads with zero planes (the qsweep stacking contract)
+    deeper = csd_expand(W, depth=planes.shape[0] + 3)
+    np.testing.assert_array_equal(deeper[:planes.shape[0]], planes)
+    assert not deeper[planes.shape[0]:].any()
+
+
+def test_csd_expand_old_import_path_deprecated():
+    import warnings
+    from repro.kernels.csd_matvec import csd_expand as old_expand
+    W = RNG.integers(-15, 16, (4, 4))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        planes = old_expand(W)
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+    np.testing.assert_array_equal(planes, csd_expand(W))
+
+
+@pytest.mark.parametrize("Q,M,K,N", [(4, 128, 16, 128), (3, 70, 16, 10),
+                                     (1, 200, 40, 30)])
+def test_csd_qsweep_exact(Q, M, K, N):
+    """Stacked digit-plane matvec == per-network int64 matmul, including
+    padding shapes and per-network plane depths (DESIGN.md 11.4)."""
+    Ws = [RNG.integers(-(1 << (3 + 2 * q)), 1 << (3 + 2 * q), (K, N))
+          for q in range(Q)]
+    planes = csd_expand_stack(Ws)
+    # stacking contract: per-network planes zero-padded to the max depth
+    assert planes.shape[:2] == (Q, max(csd_expand(w).shape[0] for w in Ws))
+    x = RNG.integers(-128, 128, (Q, M, K)).astype(np.int32)
+    y = np.asarray(csd_qsweep(jnp.asarray(x), jnp.asarray(planes)))
+    for q in range(Q):
+        np.testing.assert_array_equal(
+            y[q].astype(np.int64),
+            x[q].astype(np.int64) @ np.asarray(Ws[q], np.int64))
+
+
+def test_csd_qsweep_matches_per_q_dispatch():
+    Q, M, K, N = 3, 64, 12, 20
+    Ws = [RNG.integers(-255, 256, (K, N)) for _ in range(Q)]
+    planes = csd_expand_stack(Ws)
+    x = RNG.integers(-128, 128, (Q, M, K)).astype(np.int32)
+    y = np.asarray(csd_qsweep(jnp.asarray(x), jnp.asarray(planes)))
+    for q in range(Q):
+        np.testing.assert_array_equal(
+            y[q], np.asarray(csd_matvec(jnp.asarray(x[q]), w_int=Ws[q])))
 
 
 @settings(max_examples=15, deadline=None)

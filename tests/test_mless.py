@@ -1,0 +1,188 @@
+"""Vectorized multiplierless subsystem (DESIGN.md 11) — deterministic parity.
+
+The hypothesis property suites in ``test_csd_mcm.py`` / ``test_kernels.py``
+skip when hypothesis is absent; this module keeps the subsystem's
+bit-exactness guarantees in the tier-1 lane everywhere: array-CSD vs the
+scalar reference, the batched CSE pattern pass vs the Counter reference
+(hence unchanged adder counts and SIMURG Verilog), the shared planner, the
+digit-plane sweep kernel, and the tnzd ledger of ``tune_parallel``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import csd, mcm
+from repro.core.intmlp import IntMLP, hardware_accuracy
+from repro.core.planner import SynthesisPlanner, default_planner
+
+RNG = np.random.default_rng(0)
+
+EDGE_VALUES = np.asarray(
+    [0, 1, -1, 2, -2, 3, -3, 5, -5, 7, -7, 170, -170, 255, -255,
+     2**60, -(2**60), 2**61 - 1, -(2**61) + 1], np.int64)
+
+
+def _sample_values(n=4000):
+    small = RNG.integers(-(1 << 12), 1 << 12, n)
+    big = RNG.integers(-(1 << 60), 1 << 60, n // 10)
+    return np.concatenate([EDGE_VALUES, small, big])
+
+
+# ---------------------------------------------------------------------------
+# Array-CSD engine vs the scalar reference
+# ---------------------------------------------------------------------------
+
+def test_array_recoder_bit_identical_to_scalar():
+    vals = _sample_values()
+    planes = csd.to_csd_array(vals)
+    np.testing.assert_array_equal(csd.from_csd_array(planes), vals)
+    assert not ((planes[:-1] != 0) & (planes[1:] != 0)).any()   # adjacency
+    np.testing.assert_array_equal(csd.nnz_array(vals),
+                                  [csd.nnz(int(v)) for v in vals])
+    np.testing.assert_array_equal(
+        csd.drop_least_significant_digit_array(vals),
+        [csd.drop_least_significant_digit(int(v)) for v in vals])
+    np.testing.assert_array_equal(
+        csd.largest_left_shift_array(vals),
+        [csd.largest_left_shift(int(v)) for v in vals])
+    assert csd.tnzd([vals[:400]]) == csd.tnzd([vals[:400]], engine="scalar")
+
+
+def test_array_recoder_shapes_and_guards():
+    assert csd.to_csd_array(np.zeros((3, 2), np.int64)).shape == (1, 3, 2)
+    W = RNG.integers(-255, 256, (7, 5))
+    planes = csd.to_csd_array(W, depth=12)
+    assert planes.shape == (12, 7, 5)
+    np.testing.assert_array_equal(csd.from_csd_array(planes), W)
+    with pytest.raises(ValueError):
+        csd.to_csd_array(np.asarray([255]), depth=3)
+    with pytest.raises(OverflowError):
+        csd.to_csd_array(np.asarray([1 << 61]))
+    with pytest.raises(OverflowError):      # int64 min: np.abs wraps, min()
+        csd.nnz_array(np.asarray([-(1 << 63)]))   # guard must still catch it
+    with pytest.raises(ValueError):
+        csd.tnzd([W], engine="nope")
+
+
+# ---------------------------------------------------------------------------
+# Batched CSE pattern pass == Counter reference -> identical graphs/Verilog
+# ---------------------------------------------------------------------------
+
+def test_cse_pattern_engines_pick_identical_graphs():
+    for seed in range(25):
+        rng = np.random.default_rng(seed)
+        m, n = rng.integers(1, 8, 2)
+        M = rng.integers(-255, 256, (m, n))
+        g_np = mcm.synthesize(M, "cse", _pattern_engine="np")
+        g_py = mcm.synthesize(M, "cse", _pattern_engine="py")
+        assert g_np.nodes == g_py.nodes, (seed, M)
+        assert g_np.outputs == g_py.outputs, (seed, M)
+        x = rng.integers(-128, 128, (8, n))
+        np.testing.assert_array_equal(mcm.evaluate(g_np, x), x @ M.T)
+
+
+def _pendigits_like_mlp(structure=(16, 16, 10), q=5, seed=0):
+    rng = np.random.default_rng(seed)
+    ws = [rng.integers(-63, 64, (a, b)).astype(np.int64)
+          for a, b in zip(structure[:-1], structure[1:])]
+    bs = [rng.integers(-15, 16, (b,)).astype(np.int64)
+          for b in structure[1:]]
+    acts = ["htanh"] * (len(structure) - 2) + ["hsig"]
+    return IntMLP(ws, bs, acts, q=q)
+
+
+def test_simurg_verilog_unchanged_by_pattern_engine():
+    """SIMURG output on a pendigits-config net is byte-identical whether the
+    planner serves graphs from the batched or the reference pattern pass."""
+    from repro.core import simurg
+    mlp = _pendigits_like_mlp((16, 10))
+    default_planner.clear()
+    out_np = simurg.generate(mlp, arch="parallel", style="cmvm", top="t")
+    # prime the planner with reference-engine graphs for the same content
+    default_planner.clear()
+    for w in mlp.weights:
+        g = mcm.synthesize(w.T, "cse", _pattern_engine="py")
+        key = ("cse", g.matrix.shape, np.ascontiguousarray(g.matrix).tobytes())
+        default_planner._cache[key] = g
+    out_py = simurg.generate(mlp, arch="parallel", style="cmvm", top="t")
+    default_planner.clear()
+    assert out_np.verilog == out_py.verilog
+    assert out_np.report.n_adders == out_py.report.n_adders
+    assert out_np.report.area_um2 == out_py.report.area_um2
+
+
+def test_planner_cache_and_cost_parity():
+    from repro.core.archs import design_cost
+    p = SynthesisPlanner()
+    w = RNG.integers(-127, 128, (8, 4)).astype(np.int64)
+    graphs = p.cavm_graphs(w)
+    assert p.stats == {"hits": 0, "misses": 4}
+    again = p.cavm_graphs(w.astype(np.int32))      # dtype-normalized key
+    assert p.stats["hits"] == 4
+    assert all(a is b for a, b in zip(graphs, again))
+    mlp = _pendigits_like_mlp((16, 10))
+    default_planner.clear()
+    cold = design_cost(mlp, "parallel", "cavm")
+    warm = design_cost(mlp, "parallel", "cavm")
+    assert default_planner.stats["hits"] >= 10
+    assert (cold.area_um2, cold.n_adders, cold.energy_pj, cold.latency_ns) \
+        == (warm.area_um2, warm.n_adders, warm.energy_pj, warm.latency_ns)
+    default_planner.clear()
+
+
+# ---------------------------------------------------------------------------
+# Digit-plane sweep kernel + pallas sweep backend
+# ---------------------------------------------------------------------------
+
+def test_csd_qsweep_kernel_exact():
+    import jax.numpy as jnp
+    from repro.kernels import csd_expand_stack, csd_matvec, csd_qsweep
+    Q, M, K, N = 3, 70, 16, 10
+    Ws = [RNG.integers(-(1 << (4 + 3 * q)), 1 << (4 + 3 * q), (K, N))
+          for q in range(Q)]
+    planes = csd_expand_stack(Ws)
+    x = RNG.integers(-128, 128, (Q, M, K)).astype(np.int32)
+    y = np.asarray(csd_qsweep(jnp.asarray(x), jnp.asarray(planes)))
+    for q in range(Q):
+        np.testing.assert_array_equal(
+            y[q].astype(np.int64),
+            x[q].astype(np.int64) @ np.asarray(Ws[q], np.int64))
+        np.testing.assert_array_equal(
+            y[q], np.asarray(csd_matvec(jnp.asarray(x[q]), w_int=Ws[q])))
+
+
+def test_qsweep_evaluator_pallas_matches_oracle():
+    from repro.eval import QSweepEvaluator
+    struct, acts = (8, 7, 5), ["htanh", "hsig"]
+    x = RNG.integers(-128, 128, (151, 8)).astype(np.int64)
+    y = RNG.integers(0, 5, 151)
+    mlps = []
+    for q in (2, 4, 9):
+        rng = np.random.default_rng(q)
+        ws = [rng.integers(-(1 << q), 1 << q, (a, b)).astype(np.int64)
+              for a, b in zip(struct[:-1], struct[1:])]
+        bs = [rng.integers(-3, 4, (b,)).astype(np.int64)
+              for b in struct[1:]]
+        mlps.append(IntMLP(ws, bs, list(acts), q))
+    ev = QSweepEvaluator(x, y, backend="pallas")
+    assert ev.backend == "pallas"
+    assert ev.evaluate(mlps) == [hardware_accuracy(m, x, y) for m in mlps]
+
+
+# ---------------------------------------------------------------------------
+# tune_parallel's incremental tnzd ledger
+# ---------------------------------------------------------------------------
+
+def test_tune_parallel_tnzd_ledger_matches_recount():
+    from repro.core.tuning import tune_parallel
+    mlp = _pendigits_like_mlp((8, 6, 4), q=4, seed=2)
+    x = RNG.integers(-128, 128, (97, 8)).astype(np.int64)
+    y = RNG.integers(0, 4, 97)
+    res = tune_parallel(mlp, x, y, max_sweeps=2, backend="numpy")
+    assert res.stats["tnzd_initial"] == \
+        csd.tnzd(list(mlp.weights) + list(mlp.biases), engine="scalar")
+    assert res.stats["tnzd_final"] == \
+        csd.tnzd(list(res.mlp.weights) + list(res.mlp.biases),
+                 engine="scalar")
+    # digit drops strictly reduce the ledger per replacement
+    assert res.stats["tnzd_final"] == \
+        res.stats["tnzd_initial"] - res.replacements

@@ -14,7 +14,8 @@ from repro.core import find_min_q
 from repro.core.intmlp import HW_ACTIVATIONS, IntMLP, hardware_accuracy
 from repro.core.tuning import tune_time_multiplexed
 from repro.eval import BatchedHWEvaluator, Candidate, QSweepEvaluator, TMStep
-from repro.eval.batched import net_accum_bound, net_int32_safe
+from repro.eval.batched import (csd_net_accum_bound, csd_net_int32_safe,
+                                net_accum_bound, net_int32_safe)
 
 RNG = np.random.default_rng(11)
 
@@ -54,6 +55,59 @@ def test_qsweep_oracle_parity(backend):
         ev = QSweepEvaluator(x, y, backend=backend, qchunk=3)  # chunk split
         assert ev.evaluate(mlps) == [hardware_accuracy(m, x, y)
                                      for m in mlps], (trial, struct, acts)
+
+
+def test_qsweep_pallas_digit_plane_parity():
+    """The pallas sweep backend (digit-plane kernel, DESIGN.md 11.4) scores
+    every network of a mixed-q batch exactly like the oracle and the jnp
+    (dot_general) path."""
+    for trial in range(3):
+        n_layers = int(RNG.integers(1, 4))
+        struct = tuple(int(RNG.integers(3, 11)) for _ in range(n_layers + 1))
+        acts = [str(RNG.choice(HW_ACTIVATIONS)) for _ in range(n_layers)]
+        x, y = _rand_data(struct)
+        mlps = [_rand_mlp(struct, acts, int(q), 1 << int(min(q + 2, 10)))
+                for q in RNG.integers(1, 13, 4)]
+        ev = QSweepEvaluator(x, y, backend="pallas", qchunk=3)
+        assert ev.backend == "pallas"
+        assert ev.evaluate(mlps) == [hardware_accuracy(m, x, y)
+                                     for m in mlps], (trial, struct, acts)
+
+
+def test_qsweep_pallas_csd_bound_demotes_per_network():
+    """Digit-plane accumulators follow the CSD absolute-digit bound (up to
+    ~4/3 of |w|): networks past it demote to the exact host path while the
+    rest of the batch stays on the kernel, and scores never change."""
+    struct, acts = (6, 5), ["hsig"]
+    x, y = _rand_data(struct)
+    safe = _rand_mlp(struct, acts, 8, 1 << 6)
+    big = _rand_mlp(struct, acts, 8, 1)
+    # weights of all-ones CSD digit trains (2^k - 1 alternating) maximize the
+    # digit-reconstruction blowup; scale one network past the int32 bound
+    big.weights[0][:] = ((1 << 24) - 1) // 3 * 2 + 1     # ~0b101010...1
+    assert not csd_net_int32_safe(big)
+    assert csd_net_accum_bound(big) > net_accum_bound(big)
+    ev = QSweepEvaluator(x, y, backend="pallas")
+    has = ev.evaluate([safe, big, safe])
+    assert ev.stats["demoted"] == 1
+    assert has == [hardware_accuracy(m, x, y) for m in (safe, big, safe)]
+
+
+def test_find_min_q_pallas_matches_qmatmul_path():
+    """Acceptance criterion (DESIGN.md 11.4): the IV-A search on the
+    digit-plane sweep kernel reproduces the dot_general path's
+    ``(q, ha, history)`` exactly."""
+    rng = np.random.default_rng(23)
+    w = [rng.normal(0, 0.6, (8, 7)), rng.normal(0, 0.6, (7, 5))]
+    b = [rng.normal(0, 0.2, 7), rng.normal(0, 0.2, 5)]
+    acts = ("htanh", "hsig")
+    x = rng.integers(-128, 128, (151, 8)).astype(np.int64)
+    y = rng.integers(0, 5, 151)
+    ref = find_min_q(w, b, acts, x, y, engine="serial")
+    for backend in ("jnp", "pallas"):
+        ev = QSweepEvaluator(x, y, backend=backend)
+        got = find_min_q(w, b, acts, x, y, evaluator=ev)
+        assert (got.q, got.ha, got.history) == (ref.q, ref.ha, ref.history)
 
 
 def test_qsweep_mixed_tiers_stay_exact():
