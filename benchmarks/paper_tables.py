@@ -23,6 +23,12 @@ and every ``design_cost`` synthesis goes through the shared adder-graph
 planner — Figs. 13-18 re-price the same tuned networks, so their shift-add
 plans are cache-served (the planner row at the end of ``figs10_18`` reports
 the hit/miss counters for the whole table set).
+
+``pareto`` renders Table IV-style joint rows from the ``repro.explore``
+design-space sweep (DESIGN.md 12.4): per structure, the area-vs-accuracy
+Pareto front over ``(arch x style) x q-ladder x tuned/untuned``, accuracy
+scored through the shared validation evaluator in stacked dispatches and
+costs priced on the vectorized cost IR with the warm shared planner.
 """
 from __future__ import annotations
 
@@ -219,4 +225,46 @@ def figs10_18():
                  f"synth_misses="
                  f"{default_planner.stats['misses'] - stats0['misses']};"
                  f"plans_cached={len(default_planner)}"))
+    return rows
+
+
+def pareto(structures=((16, 10), (16, 16, 10)), q_span=2,
+           tuners=("none", "parallel"), max_sweeps=3):
+    """Table IV-style joint design-space rows (DESIGN.md 12.4).
+
+    For each structure (zaal-adam trainer): sweep ``(arch x style) x
+    [min_q .. min_q + q_span] x tuned/untuned`` with ``repro.explore`` and
+    emit one row per area-vs-accuracy Pareto-front member, plus a summary
+    row with the sweep's batching counters.  The q ladder reuses the
+    pipeline's min-q result; the evaluator is the shared validation-split
+    instance, so accuracy scoring stays inside the batched sweep engine.
+    """
+    from repro.explore import explore
+    art = Pipeline.get()
+    rows = []
+    for (st, tr), r in art["runs"].items():
+        if tr != "zaal-adam" or st not in structures:
+            continue
+        sid = "-".join(map(str, st))
+        hw_acts = tuple(["htanh"] * (len(st) - 2) + ["hsig"])
+        qmin = r["q"].q
+        t0 = time.time()
+        res = explore(r["train"].weights, r["train"].biases, hw_acts,
+                      *art["val"], qs=range(qmin, qmin + q_span + 1),
+                      tuners=tuners, max_sweeps=max_sweeps,
+                      evaluator=art["val_ev"])
+        wall = time.time() - t0
+        front = res.front("area_um2")
+        for p in front:
+            rows.append((f"pareto/{sid}/{p.arch}-{p.style}/q{p.q}/{p.tuner}",
+                         wall / max(1, len(front)) * 1e6,
+                         f"ha={p.ha:.1f};area={p.area_um2:.0f};"
+                         f"lat_ns={p.latency_ns:.1f};"
+                         f"energy_pJ={p.energy_pj:.0f};"
+                         f"adders={p.n_adders};tnzd={p.tnzd}"))
+        rows.append((f"pareto/{sid}/summary", wall * 1e6,
+                     f"points={res.stats['n_points']};front={len(front)};"
+                     f"networks={res.stats['n_networks']};"
+                     f"planner_hits={res.stats['planner_hits']};"
+                     f"planner_misses={res.stats['planner_misses']}"))
     return rows

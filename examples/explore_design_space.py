@@ -1,0 +1,72 @@
+"""Exploring the design space: Pareto fronts over (arch x style x q x tuning).
+
+The paper's headline result is a *joint* story — quantization level, weight
+tuning, design architecture and multiplierless style all trade hardware cost
+against hardware accuracy together.  This walkthrough sweeps that whole grid
+for one pendigits MLP with `repro.explore` (DESIGN.md 12.4) and prints the
+accuracy-vs-cost Pareto fronts, step by step:
+
+1. **Train** a float 16-16-10 ANN on the pendigits surrogate (ZAAL trainer,
+   DESIGN.md 6 — surrogate data, treat accuracies relatively).
+2. **Explore**: `explore()` derives a q ladder from the Section IV-A min-q
+   search, builds the `(q, tuned/untuned)` network grid — tuned variants run
+   the paper's IV-B digit-drop tuner, here both the tnzd engine and the
+   planner-aware `cost="adders"` engine (DESIGN.md 12.3, its polish phase
+   climbs on priced shared-plan adder counts) — scores the WHOLE grid's
+   hardware accuracy in one stacked `QSweepEvaluator` dispatch, and prices
+   every `(arch, style)` combo on the vectorized cost IR with the warm
+   shared planner (DESIGN.md 12.1-12.2).
+3. **Read the fronts**: non-dominated designs per cost metric; every other
+   corner of the grid is dominated by something on the front.
+
+Run:  PYTHONPATH=src python examples/explore_design_space.py
+"""
+import numpy as np
+
+from repro.core import quantize_inputs
+from repro.data import pendigits
+from repro.explore import explore
+from repro.train.zaal import TrainConfig, train
+
+
+def main() -> None:
+    ds = pendigits.load()
+    (xtr, ytr), (xval, yval) = ds.validation_split()
+    print("== 1. train a float 16-16-10 ANN (pendigits surrogate)")
+    res = train(TrainConfig(structure=(16, 16, 10), epochs=25, seed=3),
+                pendigits.to_unit(xtr), ytr, pendigits.to_unit(xval), yval)
+    print(f"   float validation accuracy: {res.val_acc:.1f}%")
+
+    print("== 2. sweep the design space (arch x style x q x tuning)")
+    x_val = quantize_inputs(pendigits.to_unit(xval))
+    result = explore(res.weights, res.biases, ("htanh", "hsig"),
+                     x_val, yval, q_span=2,
+                     tuners=("none", "parallel", "parallel-adders"),
+                     max_sweeps=3)
+    s = result.stats
+    print(f"   {s['n_networks']} networks (q ladder {result.qs} x "
+          f"{result.tuners}) -> {s['n_points']} priced design points")
+    print(f"   accuracy axis: {s['eval_calls']} stacked evaluator "
+          f"dispatch(es); cost axis: planner {s['planner_hits']} hits / "
+          f"{s['planner_misses']} misses; wall {s['wall_s']:.1f}s "
+          f"(tuning {s['tune_s']:.1f}s)")
+
+    for metric, label in [("area_um2", "area (um^2)"),
+                          ("energy_pj", "energy (pJ)"),
+                          ("latency_ns", "latency (ns)")]:
+        front = result.front(metric)
+        print(f"== Pareto front: hardware accuracy vs {label} "
+              f"({len(front)} of {len(result.points)} points)")
+        for p in front:
+            print("   " + p.row())
+
+    top = max(p.ha for p in result.points)
+    for slack in (0.0, 1.0, 3.0):
+        b = result.best("area_um2", min_ha=top - slack)
+        print(f"== cheapest design within {slack:.0f}pp of the best accuracy "
+              f"({top - slack:.1f}%):")
+        print("   " + b.row())
+
+
+if __name__ == "__main__":
+    main()

@@ -60,12 +60,12 @@ def main():
     res = train(cfg, pendigits.to_unit(xtr), ytr,
                 pendigits.to_unit(xval), yval)
     xval_int = quantize_inputs(pendigits.to_unit(xval))
-    qr = find_min_q(res.weights, res.biases, ("htanh", "hsig"),
+    qr = find_min_q(res.weights, res.biases, ("hsig",),
                     xval_int, yval)          # batched sweep engine (default)
     print(f"   {'q':>4s} {'ha%':>7s} {'tnzd':>6s} {'CSE adders':>11s}"
           f"   (layer-1 CMVM)")
     for q, ha in qr.history:
-        mlp_q = quantize_mlp(res.weights, res.biases, ("htanh", "hsig"), q)
+        mlp_q = quantize_mlp(res.weights, res.biases, ("hsig",), q)
         # shared planner (DESIGN.md 11.3): repeat trajectories (and the
         # design_cost/simurg consumers) reuse these plans for free
         adders = planner.cmvm_graph(mlp_q.weights[0]).n_adders

@@ -39,7 +39,7 @@ def main():
     print(f"   float: train={res.train_acc:.1f}% val={res.val_acc:.1f}%")
 
     print("== 2. minimum quantization value (paper IV-A, batched sweep) ==")
-    hw_acts = ("htanh", "htanh", "hsig")
+    hw_acts = ("htanh", "hsig")
     xval_int = quantize_inputs(pendigits.to_unit(xval))
     xte_int = quantize_inputs(pendigits.to_unit(ds.x_test))
     # the sweep engine scores a whole block of candidate q levels in one

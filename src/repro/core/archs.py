@@ -14,6 +14,18 @@ style (Section V): parallel takes ``'cavm'`` (per-neuron shift-add, alg. of
 takes ``'mcm'`` (per-layer MCM block feeding the accumulators, Fig. 9).
 SMAC_ANN multiplierless is intentionally priced too — the paper notes it
 *increases* complexity, and the model reproduces that.
+
+Two pricing engines (DESIGN.md 12):
+
+* ``engine="array"`` (default) — the cost-IR builders: per-column magnitude
+  bitwidths, multiplier/adder tallies, and CSD/planner graph bounds come
+  from whole-array ops (``csd.bit_length_array`` and friends), priced by the
+  vectorized ``hwmodel.*_vec`` twins into a :class:`~repro.core.hwmodel.
+  CostSheet` ledger whose sequential fold reproduces the scalar builders'
+  float accumulation exactly — every :class:`DesignReport` field is
+  bit-identical (golden suite in ``tests/test_costir.py``).
+* ``engine="scalar"`` — the seed's per-scalar builders, kept verbatim as the
+  parity reference and benchmark baseline (``--only explore``).
 """
 from __future__ import annotations
 
@@ -21,15 +33,25 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from . import hwmodel
-from .hwmodel import TECH40, Primitive, acc_bits, adder, mux, register
-from .planner import default_planner as planner
+from . import csd, hwmodel
+from .hwmodel import (TECH40, CostSheet, Primitive, acc_bits, adder,
+                      adder_vec, multiplier_vec, mux, mux_vec, register,
+                      register_vec)
+from .planner import default_planner
 from .intmlp import FRAC, IntMLP
 from .tuning import sls_of
 
-__all__ = ["DesignReport", "design_cost", "cycle_count"]
+__all__ = ["DesignReport", "design_cost", "cycle_count", "ARCH_STYLES"]
 
 BITS_X = 8  # layer IO bitwidth (paper Section VII)
+
+#: Every (architecture, style) combination the cost model prices — the
+#: design-space axes ``repro.explore`` sweeps.
+ARCH_STYLES = (
+    ("parallel", "behavioral"), ("parallel", "cavm"), ("parallel", "cmvm"),
+    ("smac_neuron", "behavioral"), ("smac_neuron", "mcm"),
+    ("smac_ann", "behavioral"), ("smac_ann", "mcm"),
+)
 
 
 @dataclass
@@ -56,6 +78,30 @@ def _wbits(values) -> int:
     return max((v.bit_length() for v in vals), default=1) + 1  # +1 sign
 
 
+def _wbits_of_bl(bl: np.ndarray) -> int:
+    """:func:`_wbits` from precomputed per-element bit lengths."""
+    mx = int(bl.max()) if bl.size else 0
+    return (mx if mx > 0 else 1) + 1
+
+
+def _wbits_array(values) -> int:
+    """Whole-array :func:`_wbits`: one signed magnitude bitwidth for a set."""
+    return _wbits_of_bl(csd.bit_length_array(values))
+
+
+def _wbits_cols_of_bl(bl: np.ndarray) -> np.ndarray:
+    """Per-column :func:`_wbits` from precomputed (n_in, n_out) bit lengths."""
+    mx = bl.max(axis=0)
+    return np.where(mx > 0, mx, 1) + 1
+
+
+def _sls_cols(w: np.ndarray) -> np.ndarray:
+    """Per-column smallest left shift (:func:`~repro.core.tuning.sls_of`)."""
+    lls = csd.largest_left_shift_array(w)       # 63 sentinel for zeros
+    has = (w != 0).any(axis=0)
+    return np.where(has, lls.min(axis=0), 0)
+
+
 def cycle_count(mlp: IntMLP, arch: str) -> int:
     iotas = [w.shape[0] for w in mlp.weights]       # inputs per layer
     etas = [w.shape[1] for w in mlp.weights]        # neurons per layer
@@ -69,10 +115,261 @@ def cycle_count(mlp: IntMLP, arch: str) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Parallel architecture
+# Shared pricing blocks (deduplicated across the three builders)
 # ---------------------------------------------------------------------------
 
-def _parallel(mlp: IntMLP, style: str, tech) -> DesignReport:
+def _bound_adder_addends(g, tech, input_max: int):
+    """(area, energy, n_adders) of one plan's value-bound adders — memoized
+    on the (planner-shared) graph instance, so repeat pricing is one dict
+    hit."""
+    key = ("priced-adders", input_max, tech)
+    cached = g._memo.get(key)
+    if cached is None:
+        bounds = np.asarray(g.value_bounds(input_max=input_max),
+                            dtype=np.int64)
+        a, _, e = adder_vec(csd.bit_length_array(bounds) + 1, tech)
+        cached = g._memo[key] = (a, e, g.n_adders)
+    return cached
+
+
+def _price_graph_bounds(sheet: CostSheet, graphs, tech, kind: str = "adder",
+                        input_max: int = 1 << (BITS_X - 1)) -> None:
+    """One adder per plan node/output, sized by its value bound — the block
+    every multiplierless style prices.  Vectorized over the concatenated
+    bound addends of a whole run of plans (graph order preserved, so the
+    ledger order equals the scalar builders' graph-by-graph loop)."""
+    priced = [_bound_adder_addends(g, tech, input_max) for g in graphs]
+    n_adders = sum(p[2] for p in priced)
+    if len(priced) == 1:
+        a, e, _ = priced[0]
+    else:
+        a = np.concatenate([p[0] for p in priced])
+        e = np.concatenate([p[1] for p in priced])
+    sheet.add(kind, area=a, energy=e, count=n_adders)
+
+
+def _price_activation_units(sheet: CostSheet, abits: int, n_out: int,
+                            tech) -> Primitive:
+    """The per-layer activation-unit bank (one clamp/shift unit per neuron)."""
+    au = hwmodel.activation_unit(abits, tech)
+    sheet.add_primitive("act", au, n=n_out, count=n_out)
+    return au
+
+
+def _price_bias_adders(sheet: CostSheet, abits: int, n_out: int,
+                       tech) -> Primitive:
+    """The per-layer bias-adder bank (one accumulator-width adder per neuron)."""
+    bias_add = adder(abits, tech)
+    sheet.add_primitive("adder", bias_add, n=n_out, count=n_out)
+    return bias_add
+
+
+# ---------------------------------------------------------------------------
+# Parallel architecture (cost-IR builder)
+# ---------------------------------------------------------------------------
+
+def _parallel(mlp: IntMLP, style: str, tech, planner) -> DesignReport:
+    sheet = CostSheet(tech)     # one flat ledger: the scalar builder keeps a
+    path = 0.0                  # single running accumulator across layers
+    for w, b, act in zip(mlp.weights, mlp.biases, mlp.activations):
+        n_in, n_out = w.shape
+        bl = csd.bit_length_array(w)                      # one recoding/layer
+        abits = acc_bits(n_in + 1, BITS_X, _wbits_of_bl(bl))
+        if style == "behavioral":
+            nzmask = w != 0
+            nz = nzmask.sum(axis=0)                       # per neuron column
+            wb = bl + 1                                   # per-element _wbits
+            m_area, m_delay, m_energy = multiplier_vec(BITS_X, wb, tech)
+            maskT = nzmask.T.ravel()                      # neuron-major order
+            tree = adder(abits, tech)
+            n_tree = np.maximum(0, nz - 1) + 1            # + bias adder
+            # ledger order = the scalar loop's: column m's multipliers, then
+            # its adder-tree addend, then column m+1 ...
+            ins = np.cumsum(nz)
+            sheet.add("mult+tree",
+                      area=np.insert(m_area.T.ravel()[maskT], ins,
+                                     tree.area * n_tree),
+                      energy=np.insert(m_energy.T.ravel()[maskT], ins,
+                                       tree.energy * n_tree))
+            sheet.add("mult", count=int(nz.sum()))
+            sheet.add("adder", count=int(n_tree.sum()))
+            mult_delay = float(m_delay.T.ravel()[maskT].max()) \
+                if maskT.any() else 0.0
+            depth = np.ceil(np.log2(np.maximum(2, nz))).astype(np.int64) + 1
+            tree_delay = float((depth * tree.delay).max()) if n_out else 0.0
+            # layer critical path = slowest multiplier + slowest adder tree
+            # (neurons are parallel, not chained)
+            layer_delay = mult_delay + tree_delay
+        elif style in ("cavm", "cmvm"):
+            # shared planner: simurg.generate and repeat pricing reuse these
+            if style == "cavm":
+                graphs = planner.cavm_graphs(w)
+            else:
+                graphs = [planner.cmvm_graph(w)]   # (n_out, n_in) matrix
+            ad = adder(abits, tech)
+            _price_graph_bounds(sheet, graphs, tech)
+            gdelay = max((g.depth * ad.delay for g in graphs), default=0.0)
+            bias_add = _price_bias_adders(sheet, abits, n_out, tech)
+            layer_delay = gdelay + bias_add.delay
+        else:
+            raise ValueError(style)
+        au = _price_activation_units(sheet, abits, n_out, tech)
+        layer_delay += au.delay
+        path += layer_delay
+    # output flip-flops (paper: added for fair comparison with time-mux)
+    n_final = mlp.weights[-1].shape[1]
+    reg = register(BITS_X, tech)
+    sheet.add_primitive("register", reg, n=n_final, count=n_final)
+    area = sheet.fold_area()
+    clock = path + reg.delay
+    leak = area * tech.leak_uw_per_um2 * clock * 1e-3  # fJ
+    tally = sheet.tally()
+    return DesignReport("parallel", style, area, clock,
+                        sheet.fold_energy() + leak, 1, clock,
+                        tally.get("adder", 0), tally.get("mult", 0),
+                        detail={"components": tally, "engine": "array"})
+
+
+# ---------------------------------------------------------------------------
+# SMAC architectures (cost-IR builders)
+# ---------------------------------------------------------------------------
+
+def _smac_neuron(mlp: IntMLP, style: str, tech, planner) -> DesignReport:
+    sheet = CostSheet(tech)     # per-layer sub-sheets: the scalar builder
+    e_cycle_layers = []         # accumulates layer_area then area += it
+    for w, b, act in zip(mlp.weights, mlp.biases, mlp.activations):
+        n_in, n_out = w.shape
+        lsheet = CostSheet(tech)
+        bl = csd.bit_length_array(w)                      # one recoding/layer
+        wb_cols = _wbits_cols_of_bl(bl)
+        wbits_w = _wbits_of_bl(bl)
+        if style == "behavioral":
+            wb = np.maximum(1, wb_cols - _sls_cols(w))   # IV-C: narrowed path
+            abits = BITS_X + wb + int(np.ceil(np.log2(max(2, n_in + 1))))
+            m_a, m_d, m_e = multiplier_vec(BITS_X, wb, tech)
+            a_a, a_d, a_e = adder_vec(abits, tech)
+            r_a, r_d, r_e = register_vec(abits, tech)
+            x_a, x_d, x_e = mux_vec(n_in, wb, tech)
+            # one MAC addend per neuron: mult + acc + reg + weight mux, the
+            # scalar builder's left-associated sum
+            lsheet.add("mac", area=((m_a + a_a) + r_a) + x_a,
+                       energy=((m_e + a_e) + r_e) + x_e,
+                       delay=((m_d + a_d) + r_d) + x_d)
+            lsheet.add("mult", count=n_out)
+            lsheet.add("adder", count=n_out)
+        elif style == "mcm":
+            # Fig. 9: one MCM block for all layer weights x the muxed input
+            consts = np.unique(np.abs(w[w != 0]).astype(np.int64))
+            if consts.size == 0:
+                consts = np.asarray([1], dtype=np.int64)
+            g = planner.mcm_graph(consts)               # MCM: (m,1) matrix
+            _price_graph_bounds(lsheet, [g], tech)
+            mcm_delay = g.depth * adder(BITS_X + wbits_w, tech).delay
+            abits = (BITS_X + wb_cols
+                     + int(np.ceil(np.log2(max(2, n_in + 1)))))
+            a_a, a_d, a_e = adder_vec(abits, tech)
+            r_a, r_d, r_e = register_vec(abits, tech)
+            p_a, p_d, p_e = mux_vec(len(consts), abits, tech)  # product sel
+            lsheet.add("mac", area=(a_a + r_a) + p_a,
+                       energy=(a_e + r_e) + p_e,
+                       delay=((mcm_delay + p_d) + a_d) + r_d)
+            lsheet.add("adder", count=n_out)
+        else:
+            raise ValueError(style)
+        # shared per-layer input mux + control counter + activation bank
+        imux = mux(n_in, BITS_X, tech)
+        ctrl = hwmodel.counter(max(1, int(np.ceil(np.log2(n_in + 1)))), tech)
+        au = hwmodel.activation_unit(BITS_X + wbits_w, tech)
+        lsheet.add("ctrl+act",
+                   area=(imux.area + ctrl.area) + au.area * n_out,
+                   energy=imux.energy + ctrl.energy)
+        e_cycle_layers.append((lsheet.fold_energy(), n_in + 1))
+        sheet.add_sheet(lsheet, kind="layer")
+    cycles = cycle_count(mlp, "smac_neuron")
+    area = sheet.fold_area()
+    clock = sheet.max_delay()
+    # layer k is active only during its own iota_k+1 cycles (paper: disabled
+    # layers save power)
+    energy = sum(e * c for e, c in e_cycle_layers)
+    latency = cycles * clock
+    # tech.leak (the seed hard-coded TECH40 here; fixed in both engines so
+    # custom-tech energy stays comparable across architectures)
+    leak = area * tech.leak_uw_per_um2 * latency * 1e-3
+    tally = sheet.tally()
+    return DesignReport("smac_neuron", style, area, latency, energy + leak,
+                        cycles, clock, tally.get("adder", 0),
+                        tally.get("mult", 0),
+                        detail={"components": tally, "engine": "array"})
+
+
+def _smac_ann(mlp: IntMLP, style: str, tech, planner) -> DesignReport:
+    all_w = np.concatenate([w.ravel() for w in mlp.weights])
+    sls = sls_of(all_w) if style == "behavioral" else 0
+    wb = max(1, _wbits_array(all_w) - sls)
+    max_in = max(w.shape[0] for w in mlp.weights)
+    max_out = max(w.shape[1] for w in mlp.weights)
+    n_weights = int(sum(w.size for w in mlp.weights))
+    n_biases = int(sum(b.size for b in mlp.biases))
+    abits = acc_bits(max_in + 1, BITS_X, wb)
+
+    # the single shared datapath: ledger order = the scalar builder's area
+    # expression, so the flat sequential fold reproduces it exactly
+    sheet = CostSheet(tech)
+    if style == "behavioral":
+        core = hwmodel.multiplier(BITS_X, wb, tech)
+        sheet.add_primitive("mult", core, count=1)
+        core_delay = core.delay
+    elif style == "mcm":
+        consts = np.unique(np.abs(all_w[all_w != 0]).astype(np.int64))
+        if consts.size == 0:
+            consts = np.asarray([1], dtype=np.int64)
+        g = planner.mcm_graph(consts)
+        _price_graph_bounds(sheet, [g], tech)
+        pmux = mux(len(consts), abits, tech)
+        sheet.add_primitive("mux", pmux, count=1)
+        core_delay = max(g.depth * adder(abits, tech).delay + pmux.delay,
+                         pmux.delay)
+    else:
+        raise ValueError(style)
+
+    acc = adder(abits, tech)
+    sheet.add_primitive("adder", acc, count=1)
+    reg = register(abits, tech)
+    sheet.add_primitive("register", reg, count=1)
+    imux = mux(max_in + max_out, BITS_X, tech)   # primary inputs + layer regs
+    wmux = mux(n_weights, wb, tech)
+    bmux = mux(n_biases, wb, tech)
+    for m in (imux, wmux, bmux):
+        sheet.add_primitive("mux", m, count=1)
+    lregs = register(BITS_X, tech)
+    sheet.add("register", area=lregs.area * max_out, count=max_out)
+    ctrl = (hwmodel.counter(max(1, int(np.ceil(np.log2(len(mlp.weights) + 1)))), tech)
+            + hwmodel.counter(max(1, int(np.ceil(np.log2(max_in + 2)))), tech)
+            + hwmodel.counter(max(1, int(np.ceil(np.log2(max_out + 1)))), tech))
+    sheet.add("counter", area=ctrl.area, energy=ctrl.energy, count=3)
+    au = hwmodel.activation_unit(abits, tech)
+    sheet.add("act", area=au.area, count=1)
+
+    area = sheet.fold_area()
+    e_cycle = sheet.fold_energy()
+    clock = core_delay + acc.delay + reg.delay + max(imux.delay, wmux.delay)
+    cycles = cycle_count(mlp, "smac_ann")
+    latency = cycles * clock
+    energy = e_cycle * cycles
+    leak = area * tech.leak_uw_per_um2 * latency * 1e-3
+    tally = sheet.tally()
+    return DesignReport("smac_ann", style, area, latency, energy + leak,
+                        cycles, clock, tally.get("adder", 0),
+                        tally.get("mult", 0),
+                        detail={"components": tally, "engine": "array"})
+
+
+# ---------------------------------------------------------------------------
+# Scalar reference builders (the seed's per-scalar loops, kept verbatim as
+# the parity baseline for the golden suite and the --only explore benchmark)
+# ---------------------------------------------------------------------------
+
+def _parallel_scalar(mlp: IntMLP, style: str, tech, planner) -> DesignReport:
     area = 0.0
     energy = 0.0
     path = 0.0
@@ -101,19 +398,15 @@ def _parallel(mlp: IntMLP, style: str, tech) -> DesignReport:
                 depth = int(np.ceil(np.log2(max(2, nz)))) + 1
                 tree_delay = max(tree_delay, depth * tree.delay)
                 n_adders += n_tree
-            # layer critical path = slowest multiplier + slowest adder tree
-            # (neurons are parallel, not chained)
             layer_delay = mult_delay + tree_delay
         elif style in ("cavm", "cmvm"):
-            # shared planner: simurg.generate and repeat pricing reuse these
             if style == "cavm":
                 graphs = planner.cavm_graphs(w)
             else:
                 graphs = [planner.cmvm_graph(w)]   # (n_out, n_in) matrix
             gdelay = 0.0
             for g in graphs:
-                bounds = g.value_bounds(input_max=(1 << (BITS_X - 1)))
-                for bnd in bounds[: len(g.nodes)] + bounds[len(g.nodes):]:
+                for bnd in g.value_bounds(input_max=(1 << (BITS_X - 1))):
                     p = adder(max(1, int(bnd).bit_length() + 1), tech)
                     area += p.area
                     energy += p.energy
@@ -131,7 +424,6 @@ def _parallel(mlp: IntMLP, style: str, tech) -> DesignReport:
         energy += au.energy * n_out
         layer_delay += au.delay
         path += layer_delay
-    # output flip-flops (paper: added for fair comparison with time-mux)
     n_final = mlp.weights[-1].shape[1]
     reg = register(BITS_X, tech)
     area += reg.area * n_final
@@ -142,11 +434,7 @@ def _parallel(mlp: IntMLP, style: str, tech) -> DesignReport:
                         clock, n_adders, n_mults)
 
 
-# ---------------------------------------------------------------------------
-# SMAC architectures
-# ---------------------------------------------------------------------------
-
-def _smac_neuron(mlp: IntMLP, style: str, tech) -> DesignReport:
+def _smac_neuron_scalar(mlp: IntMLP, style: str, tech, planner) -> DesignReport:
     area = 0.0
     e_cycle_layers = []
     clock = 0.0
@@ -172,14 +460,12 @@ def _smac_neuron(mlp: IntMLP, style: str, tech) -> DesignReport:
                 n_mults += 1
                 n_adders += 1
         elif style == "mcm":
-            # Fig. 9: one MCM block for all layer weights x the muxed input
             consts = np.asarray(sorted({abs(int(v)) for v in w.ravel()
                                         if int(v) != 0}), dtype=np.int64)
             if consts.size == 0:
                 consts = np.asarray([1], dtype=np.int64)
             g = planner.mcm_graph(consts)               # MCM: (m,1) matrix
-            bounds = g.value_bounds(input_max=(1 << (BITS_X - 1)))
-            for bnd in bounds:
+            for bnd in g.value_bounds(input_max=(1 << (BITS_X - 1))):
                 p = adder(max(1, int(bnd).bit_length() + 1), tech)
                 layer_area += p.area
                 layer_ecycle += p.energy
@@ -197,7 +483,6 @@ def _smac_neuron(mlp: IntMLP, style: str, tech) -> DesignReport:
                 n_adders += 1
         else:
             raise ValueError(style)
-        # shared per-layer input mux + control counter
         imux = mux(n_in, BITS_X, tech)
         ctrl = hwmodel.counter(max(1, int(np.ceil(np.log2(n_in + 1)))), tech)
         au = hwmodel.activation_unit(BITS_X + _wbits(w), tech)
@@ -206,16 +491,14 @@ def _smac_neuron(mlp: IntMLP, style: str, tech) -> DesignReport:
         area += layer_area
         e_cycle_layers.append((layer_ecycle, w.shape[0] + 1))
     cycles = cycle_count(mlp, "smac_neuron")
-    # layer k is active only during its own iota_k+1 cycles (paper: disabled
-    # layers save power)
     energy = sum(e * c for e, c in e_cycle_layers)
     latency = cycles * clock
-    leak = area * TECH40.leak_uw_per_um2 * latency * 1e-3
+    leak = area * tech.leak_uw_per_um2 * latency * 1e-3
     return DesignReport("smac_neuron", style, area, latency, energy + leak,
                         cycles, clock, n_adders, n_mults)
 
 
-def _smac_ann(mlp: IntMLP, style: str, tech) -> DesignReport:
+def _smac_ann_scalar(mlp: IntMLP, style: str, tech, planner) -> DesignReport:
     all_w = np.concatenate([w.ravel() for w in mlp.weights])
     sls = sls_of(all_w) if style == "behavioral" else 0
     wb = max(1, _wbits(all_w) - sls)
@@ -269,13 +552,33 @@ def _smac_ann(mlp: IntMLP, style: str, tech) -> DesignReport:
                         cycles, clock, n_adders, n_mults)
 
 
+_BUILDERS = {
+    "array": {"parallel": _parallel, "smac_neuron": _smac_neuron,
+              "smac_ann": _smac_ann},
+    "scalar": {"parallel": _parallel_scalar,
+               "smac_neuron": _smac_neuron_scalar,
+               "smac_ann": _smac_ann_scalar},
+}
+
+
 def design_cost(mlp: IntMLP, arch: str, style: str = "behavioral",
-                tech=TECH40) -> DesignReport:
-    """Price an IntMLP under a Section III architecture + Section V style."""
-    if arch == "parallel":
-        return _parallel(mlp, style, tech)
-    if arch == "smac_neuron":
-        return _smac_neuron(mlp, style, tech)
-    if arch == "smac_ann":
-        return _smac_ann(mlp, style, tech)
-    raise ValueError(arch)
+                tech=TECH40, engine: str = "array",
+                planner=None) -> DesignReport:
+    """Price an IntMLP under a Section III architecture + Section V style.
+
+    ``engine="array"`` (default) prices through the vectorized cost IR;
+    ``engine="scalar"`` is the seed's per-scalar reference.  Both return
+    bit-identical :class:`DesignReport` numbers (the array reports
+    additionally carry a component tally in ``detail``).  ``planner``
+    selects the shift-add plan cache the multiplierless styles synthesize
+    through (default: the process-wide shared planner).
+    """
+    builders = _BUILDERS.get(engine)
+    if builders is None:
+        raise ValueError(engine)
+    builder = builders.get(arch)
+    if builder is None:
+        raise ValueError(arch)
+    # explicit None test: an empty SynthesisPlanner is falsy (len() == 0)
+    return builder(mlp, style, tech,
+                   default_planner if planner is None else planner)

@@ -41,6 +41,7 @@ __all__ = [
     "nnz_array",
     "drop_least_significant_digit_array",
     "largest_left_shift_array",
+    "bit_length_array",
 ]
 
 # Valid domain of the array engine: |v| < 2^61 keeps 3*v inside int64.
@@ -210,3 +211,17 @@ def largest_left_shift_array(values) -> np.ndarray:
     v = np.asarray(values, dtype=np.int64)
     low = v & -v
     return np.where(v == 0, np.int64(63), _popcount(low - 1))
+
+
+def bit_length_array(values) -> np.ndarray:
+    """Whole-array ``int(abs(v)).bit_length()`` (0 for 0) — the magnitude
+    bitwidths the cost model prices multipliers/adders by (DESIGN.md 12.1).
+    Bit-smearing + popcount; valid on the array engine's ``|v| < 2**61``
+    domain (guarded, like :func:`_csd_masks`)."""
+    v = np.asarray(values, dtype=np.int64)
+    if v.size and (int(v.min()) <= -_MAX_ABS or int(v.max()) >= _MAX_ABS):
+        raise OverflowError("bit_length_array requires |v| < 2**61")
+    x = np.abs(v)
+    for s in (1, 2, 4, 8, 16, 32):
+        x = x | (x >> s)
+    return _popcount(x)

@@ -10,15 +10,28 @@ consistent linear model is sufficient.
 
 Constants are in um^2 (area), ns (delay) and fJ (energy per operation),
 loosely calibrated to 40nm standard-cell data (Horowitz ISSCC'14 scaling).
+
+Two pricing surfaces live here (DESIGN.md 12.1):
+
+* the **scalar primitives** (``adder`` / ``multiplier`` / ...) — one
+  :class:`Primitive` per block instance, the seed's per-scalar pricing;
+* the **cost IR** — :class:`CostSheet`, a typed component ledger whose
+  entries carry whole *arrays* of area/energy addends (priced by the
+  ``*_vec`` twins below) and per-kind unit tallies.  Folding is exact
+  sequential float accumulation (``np.cumsum`` — numpy's accumulate is the
+  left-to-right rounding chain, unlike pairwise ``np.sum``), so a sheet
+  built in a scalar builder's accumulation order folds to *bit-identical*
+  totals while the addends themselves are produced by vectorized ops.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
 __all__ = ["Tech", "TECH40", "adder", "multiplier", "mux", "register",
-           "counter", "activation_unit", "Primitive"]
+           "counter", "activation_unit", "Primitive", "CostSheet",
+           "adder_vec", "multiplier_vec", "mux_vec", "register_vec"]
 
 
 @dataclass(frozen=True)
@@ -101,3 +114,147 @@ def activation_unit(bits: int, tech: Tech = TECH40) -> Primitive:
 def acc_bits(n_terms: int, bits_x: int, bits_w: int) -> int:
     """Accumulator bitwidth for sum of n products of (bits_x x bits_w) ints."""
     return bits_x + bits_w + int(np.ceil(np.log2(max(2, n_terms))))
+
+
+# ---------------------------------------------------------------------------
+# Cost IR: array pricing + the CostSheet ledger (DESIGN.md 12.1)
+# ---------------------------------------------------------------------------
+#
+# The *_vec twins price whole integer arrays of operand widths at once.  Each
+# reproduces its scalar primitive's arithmetic **per element, in the same
+# operation order**, so every addend is the bit-exact float the scalar
+# builder would have accumulated.
+
+def adder_vec(bits, tech: Tech = TECH40):
+    """Array twin of :func:`adder`: per-element (area, delay, energy)."""
+    b = np.maximum(1, np.asarray(bits, dtype=np.int64))
+    return b * tech.a_fa, b * tech.d_fa, b * tech.e_fa * tech.activity
+
+
+def multiplier_vec(bits_a, bits_b, tech: Tech = TECH40):
+    """Array twin of :func:`multiplier` (either operand may be an array)."""
+    ba = np.maximum(1, np.asarray(bits_a, dtype=np.int64))
+    bb = np.maximum(1, np.asarray(bits_b, dtype=np.int64))
+    return (ba * bb * tech.a_fa * 0.95, (ba + bb) * tech.d_fa,
+            ba * bb * tech.e_fa * tech.activity)
+
+
+def mux_vec(n_inputs: int, bits, tech: Tech = TECH40):
+    """Array twin of :func:`mux` over an array of bus widths.  The delay
+    (a function of the input count alone) comes back as a scalar — adding a
+    scalar to an addend array rounds identically to a broadcast array."""
+    n = max(1, int(n_inputs))
+    stages = int(np.ceil(np.log2(n))) if n > 1 else 0
+    b = np.asarray(bits, dtype=np.int64)
+    return ((n - 1) * b * tech.a_mux2, stages * tech.d_mux,
+            (n - 1) * b * tech.e_mux2 * tech.activity)
+
+
+def register_vec(bits, tech: Tech = TECH40):
+    """Array twin of :func:`register` over an array of register widths
+    (scalar delay: clk->q + setup does not depend on the width)."""
+    b = np.asarray(bits, dtype=np.int64)
+    return b * tech.a_reg, tech.d_reg, b * tech.e_reg * tech.activity
+
+
+_EMPTY = np.zeros(0, dtype=np.float64)
+
+
+def _addends(x) -> np.ndarray:
+    """Normalize scalar-or-array cost addends to a float64 sequence."""
+    if x is None:
+        return _EMPTY
+    if isinstance(x, np.ndarray):
+        if x.dtype == np.float64 and x.ndim == 1:
+            return x
+        return np.atleast_1d(np.asarray(x, dtype=np.float64)).ravel()
+    return np.array((x,), dtype=np.float64)    # scalar fast path
+
+
+@dataclass
+class CostEntry:
+    """One ledger line: a run of same-kind component addends, in order."""
+    kind: str                  # "mult" | "adder" | "mux" | "register" | ...
+    count: int                 # hardware units tallied (n_adders/n_mults)
+    area: np.ndarray           # float64 area addends, accumulation order
+    energy: np.ndarray         # float64 energy addends, same order
+    delay: np.ndarray = field(default_factory=lambda: _EMPTY)
+
+
+class CostSheet:
+    """Typed component ledger over :class:`Primitive` pricing (the cost IR).
+
+    A sheet is an *ordered* list of :class:`CostEntry` rows.  ``fold_area`` /
+    ``fold_energy`` reduce the concatenated addend sequence with numpy's
+    sequential ``cumsum`` — the exact left-to-right rounding chain a scalar
+    ``total += p.area`` loop performs — so array-priced builders reproduce
+    the scalar builders' totals to the last bit.  ``max_delay`` folds the
+    critical-path candidates by max; ``tally`` sums per-kind unit counts.
+    Zero-valued addends are exact no-ops under IEEE addition, so entries may
+    carry area without energy (or vice versa) and still fold bit-identically.
+    """
+
+    def __init__(self, tech: Tech = TECH40):
+        self.tech = tech
+        self.entries: list[CostEntry] = []
+        self._merged_counts: dict = {}     # tallies folded in via add_sheet
+
+    def add(self, kind: str, *, area=None, energy=None, delay=None,
+            count: int = 0) -> None:
+        """Append one ledger row of addend sequences (scalars or arrays).
+        ``None`` axes contribute nothing (tally-only rows pass counts alone)."""
+        self.entries.append(CostEntry(
+            kind, int(count), _addends(area), _addends(energy),
+            _addends(delay)))
+
+    def add_primitive(self, kind: str, prim: Primitive, n: int = 1,
+                      count: int | None = None) -> None:
+        """The builders' ``total += p.area * n`` idiom: one addend per axis."""
+        self.add(kind, area=prim.area * n, energy=prim.energy * n,
+                 delay=prim.delay, count=n if count is None else count)
+
+    def add_sheet(self, other: "CostSheet", kind: str = "subtotal") -> None:
+        """Fold ``other`` and append its totals as ONE addend each — the
+        ``area += layer_area`` idiom (a rounded sub-accumulation, *not*
+        flat concatenation), carrying the child's unit tallies."""
+        self.entries.append(CostEntry(
+            kind, 0,
+            _addends(other.fold_area()), _addends(other.fold_energy()),
+            _addends(other.max_delay()) if other._has_delay() else _EMPTY))
+        for k, v in other.tally().items():
+            self._merged_counts[k] = self._merged_counts.get(k, 0) + v
+
+    # -- folding -----------------------------------------------------------
+
+    @staticmethod
+    def _seqfold(parts: list[np.ndarray]) -> float:
+        """Exact sequential sum (left-to-right, rounding at each step)."""
+        if not parts:
+            return 0.0
+        seq = np.concatenate(parts) if len(parts) > 1 else parts[0]
+        return float(np.cumsum(seq)[-1]) if seq.size else 0.0
+
+    def fold_area(self) -> float:
+        return self._seqfold([e.area for e in self.entries])
+
+    def fold_energy(self) -> float:
+        return self._seqfold([e.energy for e in self.entries])
+
+    def _has_delay(self) -> bool:
+        return any(e.delay.size for e in self.entries)
+
+    def max_delay(self) -> float:
+        """Critical-path fold: max over every entry's delay candidates."""
+        parts = [e.delay for e in self.entries if e.delay.size]
+        return float(max(p.max() for p in parts)) if parts else 0.0
+
+    def tally(self) -> dict:
+        """Unit counts by component kind (the DesignReport detail ledger)."""
+        out: dict = dict(self._merged_counts)
+        for e in self.entries:
+            if e.kind != "subtotal" and e.count:
+                out[e.kind] = out.get(e.kind, 0) + e.count
+        return out
+
+    def __len__(self) -> int:
+        return len(self.entries)

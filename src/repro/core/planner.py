@@ -27,7 +27,7 @@ import numpy as np
 from . import mcm
 
 __all__ = ["SynthesisPlanner", "default_planner", "plan", "cavm_graphs",
-           "cmvm_graph", "mcm_graph"]
+           "cmvm_graph", "mcm_graph", "cavm_adder_cost", "cmvm_adder_cost"]
 
 
 class SynthesisPlanner:
@@ -54,10 +54,23 @@ class SynthesisPlanner:
     # -- Section V operation shapes ---------------------------------------
 
     def cavm_graphs(self, w, method: str = "cse") -> list:
-        """Per-output-column CAVM plans of a layer's (n_in, n_out) weights."""
-        w = np.asarray(w, dtype=np.int64)
-        return [self.plan(w[:, m][None, :], method)
-                for m in range(w.shape[1])]
+        """Per-output-column CAVM plans of a layer's (n_in, n_out) weights.
+
+        The list itself is memoized on the whole-matrix content (one lookup
+        replaces ``n_out`` per-column key constructions on repeat pricing);
+        a list hit counts one hit per column so the stats ledger is
+        indistinguishable from per-column serving.
+        """
+        w = np.ascontiguousarray(np.asarray(w, dtype=np.int64))
+        key = ("cavm-list", method, w.shape, w.tobytes())
+        graphs = self._cache.get(key)
+        if graphs is None:
+            graphs = [self.plan(w[:, m][None, :], method)
+                      for m in range(w.shape[1])]
+            self._cache[key] = graphs
+        else:
+            self.stats["hits"] += len(graphs)
+        return list(graphs)
 
     def cmvm_graph(self, w, method: str = "cse") -> mcm.AdderGraph:
         """The layer-shared CMVM plan: realize ``w.T @ x`` as one block."""
@@ -69,6 +82,44 @@ class SynthesisPlanner:
         if consts.size == 0:
             consts = np.asarray([1], dtype=np.int64)
         return self.plan(consts[:, None], method)
+
+    # -- priced adder costs (planner-aware tuning / explorer, DESIGN.md 12) -
+
+    def column_graph(self, col, method: str = "cse") -> mcm.AdderGraph:
+        """The CAVM plan of one weight column (a (1, n) dot product)."""
+        return self.plan(np.asarray(col, dtype=np.int64).ravel()[None, :],
+                         method)
+
+    def column_adders(self, col, method: str = "cse") -> int:
+        """Priced adder count of one column's shift-add plan."""
+        return self.column_graph(col, method).n_adders
+
+    def cavm_adder_cost(self, weights, method: str = "cse") -> int:
+        """Priced CAVM adder cost of a whole network: the sum of every
+        column plan's two-operand adder count.  (Bias adders are excluded —
+        one per neuron regardless of the weights, so they cancel in every
+        comparison.)  NOTE: a (1, n) column plan has a single output, and
+        the greedy CSE counts each pattern once per output, so column plans
+        degenerate to digit-based recoding — this metric equals
+        ``tnzd(weights) - n_columns`` exactly (asserted in tests).  Cost
+        surfaces that can *diverge* from tnzd need shared plans: see
+        :meth:`cmvm_adder_cost`, the planner-aware tuning metric."""
+        return int(sum(g.n_adders for w in weights
+                       for g in self.cavm_graphs(np.atleast_2d(
+                           np.asarray(w, dtype=np.int64)), method)))
+
+    def cmvm_adders(self, w, method: str = "cse") -> int:
+        """Priced adder count of one layer's shared CMVM plan."""
+        return self.cmvm_graph(np.atleast_2d(np.asarray(w, dtype=np.int64)),
+                               method).n_adders
+
+    def cmvm_adder_cost(self, weights, method: str = "cse") -> int:
+        """Priced shared-plan adder cost of a network: the sum of per-layer
+        CMVM plan adder counts.  Cross-output CSE sharing makes this a
+        genuinely different surface from tnzd (dropping a CSD digit can
+        break a shared subexpression and *raise* it) — the cost
+        ``tune_parallel(cost="adders")`` climbs on (DESIGN.md 12.3)."""
+        return int(sum(self.cmvm_adders(w, method) for w in weights))
 
     def clear(self) -> None:
         self._cache.clear()
@@ -96,3 +147,11 @@ def cmvm_graph(w, method: str = "cse") -> mcm.AdderGraph:
 
 def mcm_graph(constants, method: str = "cse") -> mcm.AdderGraph:
     return default_planner.mcm_graph(constants, method)
+
+
+def cavm_adder_cost(weights, method: str = "cse") -> int:
+    return default_planner.cavm_adder_cost(weights, method)
+
+
+def cmvm_adder_cost(weights, method: str = "cse") -> int:
+    return default_planner.cmvm_adder_cost(weights, method)

@@ -20,6 +20,7 @@ one-forward-per-q reference loop.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -35,6 +36,16 @@ def quantize_value(v, q: int):
 
 
 def quantize_mlp(weights, biases, activations, q: int) -> IntMLP:
+    if len(activations) != len(weights):
+        # forward_int zips layers with activations, so a surplus entry
+        # SILENTLY drops the output activation (and a short list drops
+        # layers).  Seed-era callers relied on the zip, so this only warns;
+        # new-surface boundaries (repro.explore) reject it outright.
+        warnings.warn(
+            f"quantize_mlp: {len(weights)} weight matrices but "
+            f"{len(activations)} activations — forward_int zip-truncates, "
+            f"so the surplus/missing entries change the realized network",
+            stacklevel=2)
     return IntMLP(
         weights=[quantize_value(w, q) for w in weights],
         biases=[quantize_value(b, q) for b in biases],

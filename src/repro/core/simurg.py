@@ -58,6 +58,8 @@ class SimurgOutput:
                 "clock_ns": self.report.clock_ns,
                 "n_adders": self.report.n_adders,
                 "n_mults": self.report.n_mults,
+                # the cost IR's per-kind unit tally (DESIGN.md 12.1)
+                "components": self.report.detail.get("components", {}),
             }, f, indent=2)
 
 

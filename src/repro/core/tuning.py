@@ -64,17 +64,59 @@ def _batched_ev(mlp, x_val_int, y_val, backend, chunk, shard):
 
 def tune_parallel(mlp: IntMLP, x_val_int: np.ndarray, y_val: np.ndarray,
                   *, max_sweeps: int = 50, engine: str = "batched",
-                  backend: str = "auto", chunk: int = 128,
-                  shard: bool = False) -> TuneResult:
+                  cost: str = "tnzd", backend: str = "auto", chunk: int = 128,
+                  shard: bool = False, planner=None) -> TuneResult:
     """Greedy CSD-digit removal (paper IV-B).  ``engine="batched"`` scores
     candidate chunks on the repro.eval engine with decisions identical to the
-    serial loop; ``engine="serial"`` is the original reference path."""
+    serial loop; ``engine="serial"`` is the original reference path.
+
+    ``cost`` selects the hardware-cost surface the accept loop climbs on
+    (DESIGN.md 12.3):
+
+    * ``"tnzd"`` (default) — the paper's proxy: any accuracy-neutral digit
+      drop is accepted (each drop removes one nonzero CSD digit).
+    * ``"adders"`` — planner-aware tuning, two phases.  Phase 1 is the
+      paper's loop verbatim (identical decisions to ``cost="tnzd"``).
+      Phase 2 then *polishes* on the priced cost surface: per weight it
+      tries dropping ANY single CSD digit (least-significant first, the
+      paper's move included), accepting the first alternative that keeps
+      accuracy (``ha >= bha``) AND does not increase the touched layer's
+      priced shift-add cost — its :class:`~repro.core.planner.
+      SynthesisPlanner` shared CMVM plan's adder count.  Cross-neuron CSE
+      sharing makes that a genuinely different surface from tnzd (dropping
+      a digit can break a shared subexpression and raise real adder
+      counts; per-column CAVM plans cannot see this — they degenerate to
+      DBR, an affine function of tnzd, see ``planner.cavm_adder_cost``).
+      Only the touched layer is re-planned per accuracy-passing candidate;
+      every other layer, repeat matrix, and the final pricing pass are
+      planner memo hits.  Because phase 2 starts from the phase-1 (tnzd)
+      result and every accept is vetoed against the priced cost, the final
+      priced adder cost is monotonically non-increasing over polish
+      accepts and never exceeds the tnzd engine's (both asserted in
+      tests); ``TuneResult.stats`` carries the ``adders_initial`` /
+      ``adders_after_drop`` / ``adders_final`` ledger plus the planner
+      hit/miss counters, and polish sweeps continue the ``log`` numbering.
+
+    ``planner`` (cost="adders" only) selects the plan cache.  The default is
+    a RUN-LOCAL :class:`~repro.core.planner.SynthesisPlanner`, so the
+    polish phase's per-candidate plans never accumulate in the process-wide
+    cache; pass a shared planner explicitly to keep repeat runs memo-served
+    (the warm-rerun benchmark pattern) — accepting that its cache then
+    holds one plan per accuracy-passing candidate matrix.
+    """
+    if cost not in ("tnzd", "adders"):
+        raise ValueError(cost)
     if engine == "serial":
         return _tune_parallel_serial(mlp, x_val_int, y_val,
-                                     max_sweeps=max_sweeps)
+                                     max_sweeps=max_sweeps, cost=cost,
+                                     planner=planner)
     if engine != "batched":
         raise ValueError(engine)
     from repro.eval import Candidate
+    if cost == "adders" and planner is None:
+        from .planner import SynthesisPlanner
+        planner = SynthesisPlanner()     # run-local: see docstring
+    pstats0 = dict(planner.stats) if cost == "adders" else None
     ev = _batched_ev(mlp, x_val_int, y_val, backend, chunk, shard)
     bha = ev.accuracy()                             # step 1
     initial = bha
@@ -86,6 +128,8 @@ def tune_parallel(mlp: IntMLP, x_val_int: np.ndarray, y_val: np.ndarray,
     # deltas — no full recount per sweep (parity asserted in tests).
     tnzd0 = csd.tnzd(list(ev.mlp.weights) + list(ev.mlp.biases))
     tnzd_running = tnzd0
+    adders0 = planner.cmvm_adder_cost(ev.mlp.weights) \
+        if cost == "adders" else None
     while sweeps < max_sweeps:                      # step 3 loop
         sweeps += 1
         replaced_this_sweep = 0
@@ -124,15 +168,114 @@ def tune_parallel(mlp: IntMLP, x_val_int: np.ndarray, y_val: np.ndarray,
         log.append((sweeps, replaced_this_sweep, bha))
         if replaced_this_sweep == 0:                # step 4
             break
+    stats = dict(backend=ev.backend)
+    if cost == "adders":                            # phase 2: planner polish
+        adders_drop = planner.cmvm_adder_cost(ev.mlp.weights)
+        bha, sweeps, polish_acc, polish_log = _adders_polish_batched(
+            ev, bha, planner, max_sweeps, sweeps)
+        replaced_total += polish_acc
+        tnzd_running -= polish_acc
+        log.extend(polish_log)
+        stats.update(adders_initial=adders0, adders_after_drop=adders_drop,
+                     adders_final=planner.cmvm_adder_cost(ev.mlp.weights),
+                     planner_hits=planner.stats["hits"] - pstats0["hits"],
+                     planner_misses=(planner.stats["misses"]
+                                     - pstats0["misses"]))
+    stats = dict(ev.stats, **stats, tnzd_initial=tnzd0,
+                 tnzd_final=tnzd_running)
     return TuneResult(mlp=ev.mlp, bha=bha, initial_ha=initial,
                       replacements=replaced_total, sweeps=sweeps, log=log,
-                      stats=dict(ev.stats, backend=ev.backend,
-                                 tnzd_initial=tnzd0, tnzd_final=tnzd_running))
+                      stats=stats)
+
+
+def _polish_candidates(w: np.ndarray):
+    """Phase-2 alternatives of a layer: for every nonzero weight (flat
+    row-major order), every single-CSD-digit drop, least-significant digit
+    first — ``(flat_idx, alternative)`` rows from one array recoding."""
+    planes = csd.to_csd_array(w)                     # (D, n_in, n_out)
+    p2 = np.moveaxis(planes, 0, -1).reshape(-1, planes.shape[0])  # (N, D)
+    entries = np.argwhere(p2)                        # (idx asc, digit asc)
+    if not len(entries):
+        return []
+    flat = w.ravel()
+    idxs, digits = entries[:, 0], entries[:, 1]
+    alts = flat[idxs] - (p2[idxs, digits].astype(np.int64) << digits)
+    return list(zip(idxs.tolist(), alts.tolist()))
+
+
+def _adders_polish_batched(ev, bha: float, planner, max_sweeps: int,
+                           sweeps: int):
+    """Planner-aware polish sweeps (phase 2 of ``cost="adders"``).
+
+    Serial semantics: per weight, alternatives are tried in digit order and
+    the FIRST one passing both gates (accuracy, priced layer cost) commits,
+    skipping the weight's remaining alternatives.  Batching: alternatives
+    are scored in independent evaluator chunks against the committed state —
+    every score before the first accept is exactly the serial loop's, and an
+    accept (rare by construction: the accuracy landscape is converged)
+    commits immediately and re-scores the tail.  Planner synthesis runs only
+    for accuracy-passing candidates; accepts never increase the priced cost.
+    """
+    from repro.eval import Candidate
+    accepted_total = 0
+    polish_log = []
+    polish = 0
+    while polish < max_sweeps:
+        polish += 1
+        sweeps += 1
+        replaced = 0
+        for k, w in enumerate(ev.mlp.weights):
+            n_out = w.shape[1]
+            cl = _polish_candidates(w)
+            layer_cost = planner.cmvm_adders(w)
+            i = 0
+            while i < len(cl):
+                batch = cl[i:i + ev.chunk]
+                cands = [Candidate(k, fi % n_out, fi // n_out, alt)
+                         for fi, alt in batch]
+                has = ev.evaluate(cands)
+                advanced = None
+                for j, ((fi, alt), c, ha) in enumerate(zip(batch, cands,
+                                                           has)):
+                    if ha < bha:
+                        continue
+                    new_w = ev.mlp.weights[k].copy()
+                    new_w[c.row, c.col] = alt
+                    new_cost = planner.cmvm_adders(new_w)
+                    if new_cost > layer_cost:        # priced-cost veto
+                        continue
+                    ev.commit(c)                     # polish accept
+                    bha = ha
+                    layer_cost = new_cost
+                    replaced += 1
+                    accepted_total += 1
+                    # skip this weight's remaining alternatives, then
+                    # re-score the tail against the new committed state
+                    jj = j + 1
+                    while jj < len(batch) and batch[jj][0] == fi:
+                        jj += 1
+                    advanced = i + jj
+                    break
+                i = advanced if advanced is not None else i + len(batch)
+                if advanced is not None:
+                    while i < len(cl) and cl[i][0] == fi:
+                        i += 1
+        polish_log.append((sweeps, replaced, bha))
+        if replaced == 0:
+            break
+    return bha, sweeps, accepted_total, polish_log
 
 
 def _tune_parallel_serial(mlp: IntMLP, x_val_int: np.ndarray,
-                          y_val: np.ndarray, *,
-                          max_sweeps: int = 50) -> TuneResult:
+                          y_val: np.ndarray, *, max_sweeps: int = 50,
+                          cost: str = "tnzd", planner=None) -> TuneResult:
+    stats = {}
+    if cost == "adders" and planner is None:
+        from .planner import SynthesisPlanner
+        planner = SynthesisPlanner()                # run-local (see batched)
+    if cost == "adders":
+        pstats0 = dict(planner.stats)
+        stats["adders_initial"] = planner.cmvm_adder_cost(mlp.weights)
     ev = _evaluator(x_val_int, y_val)
     mlp = mlp.copy()
     bha = ev(mlp)                                   # step 1
@@ -161,8 +304,46 @@ def _tune_parallel_serial(mlp: IntMLP, x_val_int: np.ndarray,
         log.append((sweeps, replaced_this_sweep, bha))
         if replaced_this_sweep == 0:                 # step 4
             break
+    if cost == "adders":                             # phase 2: planner polish
+        stats["adders_after_drop"] = planner.cmvm_adder_cost(mlp.weights)
+        polish = 0
+        while polish < max_sweeps:
+            polish += 1
+            sweeps += 1
+            replaced = 0
+            for k, w in enumerate(mlp.weights):
+                flat = w.ravel()
+                layer_cost = planner.cmvm_adders(w)
+                for idx in range(flat.size):
+                    v = int(flat[idx])
+                    if v == 0:
+                        continue
+                    for p, dgt in enumerate(csd.to_csd(v)):
+                        if dgt == 0:
+                            continue
+                        flat[idx] = v - (dgt << p)   # drop ANY single digit
+                        ha = ev(mlp)
+                        ok = ha >= bha
+                        if ok:
+                            new_cost = planner.cmvm_adders(w)
+                            ok = new_cost <= layer_cost
+                        if ok:
+                            bha = ha
+                            layer_cost = new_cost
+                            replaced += 1
+                            replaced_total += 1
+                            break                    # next weight
+                        flat[idx] = v                # revert, next digit
+            log.append((sweeps, replaced, bha))
+            if replaced == 0:
+                break
+        stats.update(
+            adders_final=planner.cmvm_adder_cost(mlp.weights),
+            planner_hits=planner.stats["hits"] - pstats0["hits"],
+            planner_misses=planner.stats["misses"] - pstats0["misses"])
     return TuneResult(mlp=mlp, bha=bha, initial_ha=initial,
-                      replacements=replaced_total, sweeps=sweeps, log=log)
+                      replacements=replaced_total, sweeps=sweeps, log=log,
+                      stats=stats)
 
 
 # ---------------------------------------------------------------------------
@@ -231,11 +412,19 @@ def tune_time_multiplexed(mlp: IntMLP, x_val_int: np.ndarray,
                           y_val: np.ndarray, *, scope: str = "neuron",
                           bias_range: int = 4, max_sweeps: int = 50,
                           engine: str = "batched", backend: str = "auto",
-                          chunk: int = 128, shard: bool = False) -> TuneResult:
+                          chunk: int = 128, shard: bool = False,
+                          chain_engine: str = "auto") -> TuneResult:
     """Greedy smallest-left-shift maximization (paper IV-C) with bias
     nudging.  Decision-identical engines as in :func:`tune_parallel`;
     ``engine="batched"`` decides each weight group's candidate-pair +
-    bias-nudge tree in one ``evaluate_tm_chain`` pass (DESIGN.md 7.5)."""
+    bias-nudge tree in one ``evaluate_tm_chain`` pass (DESIGN.md 7.5).
+
+    ``chain_engine`` picks that pass's implementation: ``"host"`` (the
+    sparsity-aware numpy chain — the CPU default), ``"device"`` (one
+    ``lax.scan`` dispatch per run, so accelerator runs stop round-tripping
+    per group commit), or ``"auto"`` (device exactly where the evaluator's
+    chain scans already prefer it: TPU or sharded meshes).  All choices
+    are decision-identical."""
     if engine == "serial":
         return _tune_tm_serial(mlp, x_val_int, y_val, scope=scope,
                                bias_range=bias_range, max_sweeps=max_sweeps)
@@ -268,7 +457,8 @@ def tune_time_multiplexed(mlp: IntMLP, x_val_int: np.ndarray,
                 run = wcands[pos:pos + same]
                 steps = [TMStep(k, m, n, tuple(pws), dbs)
                          for (k, m, n, _w, pws) in run]
-                decisions = ev.evaluate_tm_chain(steps, bha)
+                decisions = ev.evaluate_tm_chain(steps, bha,
+                                                 engine=chain_engine)
                 accepted = []
                 for (k, m, n, _w, _pws), (ok, pw, db, ha) in zip(run,
                                                                  decisions):

@@ -473,12 +473,13 @@ class BatchedHWEvaluator:
             flags[t] = ok
         return counts, flags
 
-    def evaluate_tm_chain(self, steps: Sequence[TMStep],
-                          bha: float) -> list[tuple[bool, int, int, float]]:
+    def evaluate_tm_chain(self, steps: Sequence[TMStep], bha: float,
+                          engine: str = "auto"
+                          ) -> list[tuple[bool, int, int, float]]:
         """Follow the time-multiplexed tuner's per-weight decision tree
-        through ``steps`` in one sparsity-aware host pass (DESIGN.md 7.5):
-        step t's alternatives are scored against the chain state with every
-        earlier *accepted* step applied, its candidate values are ranked by
+        through ``steps`` in one chain pass (DESIGN.md 7.5): step t's
+        alternatives are scored against the chain state with every earlier
+        *accepted* step applied, its candidate values are ranked by
         ``(accuracy, value)`` descending, the best is accepted iff its
         accuracy clears the running best (``>=``, updating it), and on
         failure the bias nudges are tried in serial order, first hit
@@ -489,12 +490,29 @@ class BatchedHWEvaluator:
         accepted, the best rejected candidate's otherwise).  Committed state
         is untouched — commit the accepted steps as ``Candidate``s with
         :meth:`commit_many`.  Steps must share a layer and target distinct
-        weights; bias nudges always run on the host numpy chain against the
-        maintained caches (they exist on every backend), so no device
-        round-trip happens until the commit.  ``bha`` must equal the
-        committed network's accuracy (the greedy invariant), which reduces
-        every threshold to an exact integer correct-count comparison.
+        weights.  ``bha`` must equal the committed network's accuracy (the
+        greedy invariant), which reduces every threshold to an exact integer
+        correct-count comparison.
+
+        ``engine`` selects the chain implementation:
+
+        * ``"host"`` — the sparsity-aware numpy chain against the maintained
+          caches; no device round-trip until the commit.  The CPU choice.
+        * ``"device"`` — one ``lax.scan`` dispatch over the whole run
+          (``JaxState.tm_chain``): pair + nudge counts on device, nudges
+          under ``lax.cond`` so they cost nothing when the pair accepts.
+          Stops the per-group commit round-trips on TPU / sharded meshes.
+          Falls back to the host chain when the backend is numpy, the int32
+          composition guard fails, a step carries more than two candidate
+          values, or steps disagree on the nudge schedule.
+        * ``"auto"`` — ``device`` exactly where the serial chain scan
+          already prefers the device (TPU backend or a sharded mesh),
+          ``host`` otherwise.
+
+        Both engines produce bit-identical decisions (asserted in tests).
         """
+        if engine not in ("auto", "host", "device"):
+            raise ValueError(engine)
         if not steps:
             return []
         k = steps[0].layer
@@ -510,10 +528,77 @@ class BatchedHWEvaluator:
         if ha_pct(self._count, self.n_val) != bha:
             raise ValueError("bha must equal the committed network's "
                              "accuracy (greedy invariant)")
-        decisions, n_evals = self._tm_chain_np(k, steps)
+        use_device = (engine == "device"
+                      or (engine == "auto" and self._chain_scan))
+        decisions = None
+        if use_device:
+            decisions, n_evals = self._tm_chain_device(k, steps)
+        if decisions is None:
+            decisions, n_evals = self._tm_chain_np(k, steps)
         self.stats["eval_calls"] += 1
         self.stats["candidates"] += n_evals
         return decisions
+
+    def _tm_chain_device(self, k: int, steps: Sequence[TMStep]):
+        """Pack a TM run for the jitted ``lax.scan`` decision-tree chain.
+        Returns None (fall back to the host chain) when the device contract
+        cannot hold: numpy backend, >2 candidate values, mixed nudge
+        schedules, or int32-unsafe composed deltas."""
+        if self.backend == "numpy":
+            return None, 0
+        dbs = steps[0].dbs
+        if any(s.dbs != dbs for s in steps) or any(len(s.pws) > 2
+                                                   for s in steps):
+            return None, 0
+        w_k = self._mlp.weights[k]
+        n = len(steps)
+        dw_all = np.asarray([int(pw) - int(w_k[s.row, s.col])
+                             for s in steps for pw in s.pws] or [0], np.int64)
+        db_all = np.asarray([db << FRAC for db in dbs] or [0], np.int64)
+        if not self._spec_safe(k, dw_all, db_all):
+            return None, 0
+        pad_to = _SPEC_CHUNK
+        while pad_to < n:
+            pad_to *= 2
+        wi = np.zeros(pad_to, np.int64)
+        wj = np.zeros(pad_to, np.int64)
+        dw0 = np.zeros(pad_to, np.int64)
+        dw1 = np.zeros(pad_to, np.int64)
+        has2 = np.zeros(pad_to, bool)
+        valid = np.zeros(pad_to, bool)
+        pw0 = np.zeros(pad_to, np.int64)
+        pw1 = np.zeros(pad_to, np.int64)
+        for t, s in enumerate(steps):
+            wi[t], wj[t] = s.row, s.col
+            w0 = int(w_k[s.row, s.col])
+            pw0[t] = s.pws[0]
+            dw0[t] = int(s.pws[0]) - w0
+            if len(s.pws) > 1:
+                has2[t] = True
+                pw1[t] = s.pws[1]
+                dw1[t] = int(s.pws[1]) - w0
+            valid[t] = True
+        dbsh = tuple(int(db) << FRAC for db in dbs)
+        ok, sel, pair_ok, db_idx, cnt_best, cnt_dec = self._jax_state(
+        ).tm_chain(k, pad_to, self._count, dbsh, wi, wj, dw0, dw1, has2,
+                   valid, pw0, pw1)
+        decisions = []
+        n_evals = 0
+        for t, s in enumerate(steps):
+            n_evals += len(s.pws)
+            pw_best = int(s.pws[1] if sel[t] else s.pws[0])
+            if not ok[t]:
+                n_evals += len(dbs)     # all nudges were scored on device
+                decisions.append((False, pw_best, 0,
+                                  ha_pct(int(cnt_best[t]), self.n_val)))
+            elif pair_ok[t]:
+                decisions.append((True, pw_best, 0,
+                                  ha_pct(int(cnt_dec[t]), self.n_val)))
+            else:
+                n_evals += len(dbs)
+                decisions.append((True, pw_best, int(dbs[int(db_idx[t])]),
+                                  ha_pct(int(cnt_dec[t]), self.n_val)))
+        return decisions, n_evals
 
     def _tm_chain_np(self, k: int, steps: Sequence[TMStep]):
         """int64/int32 numpy chain over the TM decision tree — the same

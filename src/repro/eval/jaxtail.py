@@ -144,6 +144,142 @@ class JaxState:
                            jnp.asarray(db, jnp.int32))
         return np.asarray(counts), np.asarray(flags)
 
+    def tm_chain(self, k: int, pad_to: int, count0: int, dbsh: tuple,
+                 wi, wj, dw0, dw1, has2, valid, pw0, pw1):
+        """Device (lax.scan) variant of the time-multiplexed decision-tree
+        chain (DESIGN.md 7.5): per step, the candidate pair is scored against
+        the evolving prefix state, ranked by ``(count, value)`` descending,
+        and on a failed pair the bias nudges run under ``lax.cond`` (so they
+        cost nothing when the pair accepts) — first nudge clearing the
+        running count wins, exactly like the host chain."""
+        key = (k, pad_to, "tm", dbsh)
+        fn = self._tails.get(key)
+        if fn is None:
+            fn = self._build_tm_chain(k, dbsh)
+            self._tails[key] = fn
+        outs = fn(tuple(self.a), tuple(self.acc), tuple(self.W),
+                  tuple(self.bsh), self.lab, self.lab_safe,
+                  jnp.int32(count0),
+                  jnp.asarray(wi, jnp.int32), jnp.asarray(wj, jnp.int32),
+                  jnp.asarray(dw0, jnp.int32), jnp.asarray(dw1, jnp.int32),
+                  jnp.asarray(has2), jnp.asarray(valid),
+                  jnp.asarray(pw0, jnp.int32), jnp.asarray(pw1, jnp.int32))
+        return tuple(np.asarray(o) for o in outs)
+
+    def _build_tm_chain(self, k: int, dbsh: tuple):
+        ev = self.ev
+        mlp = ev._mlp
+        n_layers = len(mlp.weights)
+        acts = tuple(mlp.activations)
+        q = mlp.q
+        n_out = mlp.weights[-1].shape[1]
+        sharded = ev._mesh is not None
+        last = k == n_layers - 1
+        n_db = len(dbsh)
+
+        def core(a, acc, w, bsh, lab, lab_safe, count0,
+                 wi, wj, dw0, dw1, has2, valid, pw0, pw1):
+            a_k = a[k]
+            pen = n_out - 1 - jnp.arange(n_out, dtype=jnp.int32)
+
+            def count_of(act_a):
+                score = act_a * n_out + pen[None, :]
+                smax = jnp.max(score, axis=1)
+                slab = jnp.take_along_axis(score, lab_safe[:, None],
+                                           axis=1)[:, 0]
+                slab = jnp.where(lab < 0, _NEG, slab)
+                cnt = jnp.sum(slab == smax, dtype=jnp.int32)
+                return jax.lax.psum(cnt, "data") if sharded else cnt
+
+            def step(carry, xs):
+                wi_t, wj_t, dw0_t, dw1_t, has2_t, valid_t, pw0_t, pw1_t = xs
+                if last:
+                    acc_k, a_l, cnt = carry
+                else:
+                    acc_k, a_k1, acc_n, cnt = carry
+
+                def cand_count(dw_t, dbsh_t):
+                    buf = acc_k[:, wj_t] + a_k[:, wi_t] * dw_t + dbsh_t
+                    h_new = _act_requant(buf, acts[k], q)
+                    if last:
+                        return count_of(a_l.at[:, wj_t].set(h_new))
+                    dcol = h_new - a_k1[:, wj_t]
+                    acc_cand = acc_n + dcol[:, None] * w[k + 1][wj_t][None, :]
+                    act_a = _act_requant(acc_cand, acts[k + 1], q)
+                    for l in range(k + 2, n_layers):
+                        act_a = _act_requant(
+                            jax.lax.dot_general(
+                                act_a, w[l], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+                            + bsh[l][None, :], acts[l], q)
+                    return count_of(act_a)
+
+                # step 2b: the candidate pair, ranked by (count, value) desc
+                c0 = cand_count(dw0_t, jnp.int32(0))
+                c1 = jnp.where(has2_t, cand_count(dw1_t, jnp.int32(0)),
+                               jnp.int32(-1))
+                sel = (c1 > c0) | ((c1 == c0) & (pw1_t > pw0_t))
+                cnt_best = jnp.where(sel, c1, c0)
+                dw_best = jnp.where(sel, dw1_t, dw0_t)
+                pair_ok = cnt_best >= cnt             # step 2c
+
+                # step 2d: bias nudges only when the pair fails (lax.cond)
+                def nudges(_):
+                    cs = jnp.stack([cand_count(dw_best, jnp.int32(d))
+                                    for d in dbsh]) if n_db else \
+                        jnp.zeros(1, jnp.int32)
+                    hit = cs >= cnt
+                    idx = jnp.argmax(hit).astype(jnp.int32)
+                    return hit.any(), idx, cs[idx]
+
+                def no_nudges(_):
+                    return jnp.bool_(False), jnp.int32(0), jnp.int32(0)
+
+                db_ok, db_idx, cnt_db = jax.lax.cond(
+                    valid_t & ~pair_ok, nudges, no_nudges, None)
+                ok = valid_t & (pair_ok | db_ok)
+                dbsh_fin = jnp.where(
+                    pair_ok, jnp.int32(0),
+                    jnp.asarray(dbsh, jnp.int32)[db_idx] if n_db
+                    else jnp.int32(0))
+                cnt_dec = jnp.where(pair_ok, cnt_best, cnt_db)
+
+                # apply the chosen alternative's state update when accepted
+                buf = acc_k[:, wj_t] + a_k[:, wi_t] * dw_best + dbsh_fin
+                h_new = _act_requant(buf, acts[k], q)
+                acc_k = jnp.where(ok, acc_k.at[:, wj_t].set(buf), acc_k)
+                cnt = jnp.where(ok, cnt_dec, cnt)
+                if last:
+                    a_l = jnp.where(ok, a_l.at[:, wj_t].set(h_new), a_l)
+                    carry = (acc_k, a_l, cnt)
+                else:
+                    dcol = h_new - a_k1[:, wj_t]
+                    acc_nn = acc_n + dcol[:, None] * w[k + 1][wj_t][None, :]
+                    a_k1 = jnp.where(ok, a_k1.at[:, wj_t].set(h_new), a_k1)
+                    acc_n = jnp.where(ok, acc_nn, acc_n)
+                    carry = (acc_k, a_k1, acc_n, cnt)
+                return carry, (ok, sel, pair_ok, db_idx, cnt_best, cnt_dec)
+
+            if last:
+                carry0 = (acc[k], a[k + 1], count0)
+            else:
+                carry0 = (acc[k], a[k + 1], acc[k + 1], count0)
+            _, outs = jax.lax.scan(step, carry0,
+                                   (wi, wj, dw0, dw1, has2, valid, pw0, pw1))
+            return outs
+
+        if sharded:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            row, rep = P("data"), P()
+            in_specs = (tuple([row] * len(ev._a)),
+                        tuple([row] * len(ev._acc)),
+                        tuple([rep] * n_layers), tuple([rep] * n_layers),
+                        row, row, rep, rep, rep, rep, rep, rep, rep, rep, rep)
+            core = shard_map(core, mesh=ev._mesh, in_specs=in_specs,
+                             out_specs=(rep,) * 6, check_rep=False)
+        return jax.jit(core)
+
     def _build_chain(self, k: int):
         ev = self.ev
         mlp = ev._mlp

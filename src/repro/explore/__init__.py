@@ -1,0 +1,13 @@
+"""Batched design-space explorer (DESIGN.md 12.4).
+
+Sweeps ``(arch x style) x q-ladder x tuned/untuned`` for one float network:
+accuracy in stacked :class:`~repro.eval.QSweepEvaluator` dispatches, cost on
+the vectorized cost IR + warm shared planner, Pareto fronts out.  Consumed by
+``benchmarks/paper_tables.py`` (Table IV-style rows) and
+``examples/explore_design_space.py``.
+"""
+from .pareto import dominates, is_pareto_front, pareto_front  # noqa: F401
+from .space import (DesignPoint, ExploreResult, TUNERS, explore)  # noqa: F401
+
+__all__ = ["explore", "DesignPoint", "ExploreResult", "TUNERS",
+           "pareto_front", "dominates", "is_pareto_front"]

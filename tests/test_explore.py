@@ -1,0 +1,195 @@
+"""repro.explore — batched design-space explorer + Pareto fronts
+(DESIGN.md 12.4)."""
+import numpy as np
+import pytest
+
+from repro.explore import (DesignPoint, dominates, explore, is_pareto_front,
+                           pareto_front)
+
+
+# ---------------------------------------------------------------------------
+# Pareto mechanics on synthetic points
+# ---------------------------------------------------------------------------
+
+def _pt(cost, acc):
+    return {"cost": cost, "acc": acc}
+
+
+_C = lambda p: p["cost"]            # noqa: E731
+_A = lambda p: p["acc"]             # noqa: E731
+
+
+def test_dominates_convention():
+    assert dominates(1, 5, 2, 5)          # cheaper, same accuracy
+    assert dominates(1, 6, 1, 5)          # same cost, better accuracy
+    assert dominates(1, 6, 2, 5)
+    assert not dominates(1, 5, 1, 5)      # equal points do not dominate
+    assert not dominates(1, 4, 2, 5)      # trade-off: neither dominates
+    assert not dominates(2, 6, 1, 5)
+
+
+def test_pareto_front_sorted_and_strictly_improving():
+    pts = [_pt(3, 50), _pt(1, 10), _pt(2, 50), _pt(2, 30), _pt(5, 60),
+           _pt(1, 10), _pt(4, 55)]
+    front = pareto_front(pts, cost=_C, acc=_A)
+    costs = [p["cost"] for p in front]
+    accs = [p["acc"] for p in front]
+    assert costs == sorted(costs)
+    assert all(a < b for a, b in zip(accs, accs[1:]))   # strictly increasing
+    assert [(p["cost"], p["acc"]) for p in front] == [(1, 10), (2, 50),
+                                                      (4, 55), (5, 60)]
+    assert is_pareto_front(front, pts, cost=_C, acc=_A)
+
+
+def test_is_pareto_front_rejects_bad_fronts():
+    pts = [_pt(1, 10), _pt(2, 50), _pt(3, 40)]
+    assert not is_pareto_front([pts[2]], pts, cost=_C, acc=_A)  # dominated in
+    assert not is_pareto_front([pts[0]], pts, cost=_C, acc=_A)  # incomplete
+
+
+def test_pareto_front_random_bruteforce():
+    rng = np.random.default_rng(0)
+    pts = [_pt(int(c), int(a))
+           for c, a in zip(rng.integers(0, 40, 120), rng.integers(0, 40, 120))]
+    front = pareto_front(pts, cost=_C, acc=_A)
+    brute = [p for p in pts
+             if not any(dominates(_C(q), _A(q), _C(p), _A(p)) for q in pts)]
+    assert {( _C(p), _A(p)) for p in front} == {(_C(p), _A(p)) for p in brute}
+
+
+# ---------------------------------------------------------------------------
+# The explorer itself (small float net, full grid)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def explored():
+    rng = np.random.default_rng(1)
+    w1 = rng.normal(0, 0.5, (16, 12)); b1 = rng.normal(0, 0.2, 12)
+    w2 = rng.normal(0, 0.5, (12, 10)); b2 = rng.normal(0, 0.2, 10)
+    xv = rng.integers(-128, 128, (400, 16)).astype(np.int64)
+    yv = rng.integers(0, 10, 400)
+    res = explore([w1, w2], [b1, b2], ("htanh", "hsig"), xv, yv,
+                  qs=(3, 4), tuners=("none", "parallel"), max_sweeps=1)
+    return res, (xv, yv), ([w1, w2], [b1, b2])
+
+
+def test_explore_covers_the_full_grid(explored):
+    from repro.core.archs import ARCH_STYLES
+    res, _, _ = explored
+    assert res.qs == [3, 4]
+    # (q-ladder) x (tuned/untuned) x (arch x style), every corner priced
+    assert len(res.points) == 2 * 2 * len(ARCH_STYLES)
+    combos = {(p.arch, p.style, p.q, p.tuner) for p in res.points}
+    assert len(combos) == len(res.points)
+    assert res.stats["n_networks"] == 4
+    # accuracy axis: whole grid scored in ONE stacked dispatch
+    assert res.stats["eval_calls"] == 1
+    # identical (q, tuner) variants share one ha across arch/style combos
+    by_net = {}
+    for p in res.points:
+        by_net.setdefault((p.q, p.tuner), set()).add(p.ha)
+    assert all(len(v) == 1 for v in by_net.values())
+
+
+def test_explore_fronts_satisfy_dominance(explored):
+    res, _, _ = explored
+    for metric in ("area_um2", "energy_pj", "latency_ns", "n_adders"):
+        front = res.front(metric)
+        assert front, metric
+        assert is_pareto_front(front, res.points,
+                               cost=lambda p: p.cost(metric),
+                               acc=lambda p: p.ha), metric
+        costs = [p.cost(metric) for p in front]
+        has = [p.ha for p in front]
+        assert costs == sorted(costs)
+        assert all(a < b for a, b in zip(has, has[1:]))
+
+
+def test_explore_points_match_direct_pricing(explored):
+    """Every point's cost columns equal a direct design_cost call and its
+    accuracy equals the serial oracle."""
+    from repro.core.archs import design_cost
+    from repro.core.intmlp import hardware_accuracy
+    from repro.core.quantize import quantize_mlp
+    res, (xv, yv), (ws, bs) = explored
+    pts = [p for p in res.points if p.tuner == "none"]
+    for p in pts[:6]:
+        mlp = quantize_mlp(ws, bs, ("htanh", "hsig"), p.q)
+        rep = design_cost(mlp, p.arch, p.style)
+        assert (p.area_um2, p.latency_ns, p.energy_pj, p.cycles) == \
+            (rep.area_um2, rep.latency_ns, rep.energy_pj, rep.cycles)
+        assert p.ha == hardware_accuracy(mlp, xv, yv)
+
+
+def test_explore_best_and_row(explored):
+    res, _, _ = explored
+    top = max(p.ha for p in res.points)
+    b = res.best("area_um2", min_ha=top)
+    assert b is not None and b.ha == top
+    assert res.best("area_um2", min_ha=101.0) is None
+    assert isinstance(b.row(), str) and "area=" in b.row()
+
+
+def test_explore_rejects_mis_sized_activations():
+    """A surplus activation entry would silently htanh the output layer
+    (forward_int zip-truncates) — explore() rejects it at the boundary."""
+    rng = np.random.default_rng(0)
+    w = [rng.normal(0, 1, (8, 5)), rng.normal(0, 1, (5, 3))]
+    b = [rng.normal(0, 1, 5), rng.normal(0, 1, 3)]
+    xv = rng.integers(-128, 128, (10, 8)).astype(np.int64)
+    yv = rng.integers(0, 3, 10)
+    with pytest.raises(ValueError, match="activations"):
+        explore(w, b, ("htanh", "htanh", "hsig"), xv, yv, qs=(3,),
+                tuners=("none",))
+
+
+def test_explore_rejects_unknown_tuner():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        explore([rng.normal(0, 1, (4, 3))], [rng.normal(0, 1, 3)], ("hsig",),
+                rng.integers(-128, 128, (10, 4)).astype(np.int64),
+                rng.integers(0, 3, 10), qs=(3,), tuners=("none", "magic"))
+
+
+def test_explore_prices_through_the_passed_planner():
+    """A custom planner serves BOTH axes: the tuners' plan lookups and the
+    cost axis's design_cost synthesis — nothing leaks to default_planner."""
+    from repro.core.planner import SynthesisPlanner, default_planner
+    rng = np.random.default_rng(4)
+    w = [rng.normal(0, 0.6, (8, 5))]
+    b = [rng.normal(0, 0.2, 5)]
+    xv = rng.integers(-128, 128, (100, 8)).astype(np.int64)
+    yv = rng.integers(0, 5, 100)
+    p = SynthesisPlanner()
+    before = dict(default_planner.stats)
+    res = explore(w, b, ("hsig",), xv, yv, qs=(3,), tuners=("none",),
+                  planner=p)
+    assert res.stats["planner_misses"] == p.stats["misses"] > 0
+    assert dict(default_planner.stats) == before
+
+
+def test_explore_tune_kwargs_max_sweeps_wins():
+    """An explicit tune_kwargs["max_sweeps"] overrides the convenience
+    parameter: zero sweeps must leave tuned variants identical to untuned."""
+    rng = np.random.default_rng(6)
+    w = [rng.normal(0, 0.6, (8, 5))]
+    b = [rng.normal(0, 0.2, 5)]
+    xv = rng.integers(-128, 128, (150, 8)).astype(np.int64)
+    yv = rng.integers(0, 5, 150)
+    res = explore(w, b, ("hsig",), xv, yv, qs=(4,),
+                  tuners=("none", "parallel"), max_sweeps=3,
+                  tune_kwargs={"max_sweeps": 0})
+    ha = {p.tuner: p.ha for p in res.points}
+    assert ha["parallel"] == ha["none"]
+
+
+def test_explore_derives_q_ladder_from_min_q():
+    rng = np.random.default_rng(3)
+    w = [rng.normal(0, 0.6, (8, 5))]
+    b = [rng.normal(0, 0.2, 5)]
+    xv = rng.integers(-128, 128, (200, 8)).astype(np.int64)
+    yv = rng.integers(0, 5, 200)
+    from repro.core.quantize import find_min_q
+    qr = find_min_q(w, b, ("hsig",), xv, yv)
+    res = explore(w, b, ("hsig",), xv, yv, q_span=1, tuners=("none",))
+    assert res.qs == [qr.q, qr.q + 1]

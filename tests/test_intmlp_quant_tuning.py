@@ -26,7 +26,7 @@ def trained():
 
 def test_numpy_jax_bit_exact(trained):
     res, x_val_int, yval = trained
-    acts = ("htanh", "hsig")
+    acts = ("hsig",)
     mlp = quantize_mlp(res.weights, res.biases, acts, q=4)
     out_np = forward_int(mlp, x_val_int[:256])
     out_jx = np.asarray(forward_int_jax(mlp, x_val_int[:256]))
@@ -47,7 +47,7 @@ def test_activation_semantics():
 
 def test_min_q_search(trained):
     res, x_val_int, yval = trained
-    qr = find_min_q(res.weights, res.biases, ("htanh", "hsig"),
+    qr = find_min_q(res.weights, res.biases, ("hsig",),
                     x_val_int, yval)
     assert 1 <= qr.q <= 16
     assert qr.ha > 50.0                          # network works in hardware
@@ -58,7 +58,7 @@ def test_min_q_search(trained):
 
 def test_tune_parallel_reduces_tnzd(trained):
     res, x_val_int, yval = trained
-    qr = find_min_q(res.weights, res.biases, ("htanh", "hsig"),
+    qr = find_min_q(res.weights, res.biases, ("hsig",),
                     x_val_int, yval)
     before = tnzd(qr.mlp.weights)
     tr = tune_parallel(qr.mlp, x_val_int, yval, max_sweeps=3)
@@ -69,7 +69,7 @@ def test_tune_parallel_reduces_tnzd(trained):
 
 def test_tune_time_multiplexed_raises_sls(trained):
     res, x_val_int, yval = trained
-    qr = find_min_q(res.weights, res.biases, ("htanh", "hsig"),
+    qr = find_min_q(res.weights, res.biases, ("hsig",),
                     x_val_int, yval)
     sls_before = [sls_of(qr.mlp.weights[k][:, m])
                   for k in range(len(qr.mlp.weights))
@@ -85,7 +85,7 @@ def test_tune_time_multiplexed_raises_sls(trained):
 
 def test_tune_ann_scope(trained):
     res, x_val_int, yval = trained
-    qr = find_min_q(res.weights, res.biases, ("htanh", "hsig"),
+    qr = find_min_q(res.weights, res.biases, ("hsig",),
                     x_val_int, yval)
     all_before = sls_of(np.concatenate([w.ravel() for w in qr.mlp.weights]))
     tr = tune_time_multiplexed(qr.mlp, x_val_int, yval, scope="ann",

@@ -17,7 +17,7 @@ def test_full_paper_pipeline(tmp_path):
                 pendigits.to_unit(xval), yval)
     assert res.val_acc > 70.0
 
-    acts = ("htanh", "hsig")
+    acts = ("hsig",)
     xval_int = quantize_inputs(pendigits.to_unit(xval))
     qr = find_min_q(res.weights, res.biases, acts, xval_int, yval)
     before = tnzd(qr.mlp.weights + qr.mlp.biases)
