@@ -492,28 +492,72 @@ def bench_roofline():
 
 
 def bench_serving():
+    """Traffic-replay serving lane (DESIGN.md 13): seeded open-loop arrival
+    streams (exponential inter-arrival gaps at several offered rates) are
+    replayed against the paged engine on the real clock — requests are
+    submitted when their arrival time lapses, the engine steps continuously,
+    and per-request latencies come from the engine's own stats.  Reports
+    p50/p99 first-token and total latency plus decode tokens/s for bf16 vs
+    int8-PoT serving, and writes the full report to ``BENCH_serve.json``
+    (the CI artifact).  ``--smoke`` shrinks requests/rates for CI."""
     import dataclasses
     import numpy as np
-    from repro.nn import Model, get_config
-    from repro.runtime.serve import Request, ServeEngine
     import jax
+    from repro.nn import Model, get_config
+    from repro.runtime.serve import Request, ServeEngine, summarize
+
     cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
                               n_layers=2, vocab=256, remat=False)
     m = Model(cfg)
     params = m.init(jax.random.PRNGKey(0))
-    rows = []
+    n_req = 6 if SMOKE else 24
+    rates = (50.0,) if SMOKE else (20.0, 100.0)    # offered req/s
+    max_new = 6 if SMOKE else 16
+    rows, lanes = [], []
     for quant in (False, True):
-        eng = ServeEngine(cfg, params, max_batch=4, max_context=64,
-                          eos_id=-1, quantized=quant)
-        reqs = [Request(rid=i, prompt=np.arange(8, dtype=np.int32),
-                        max_new_tokens=8) for i in range(4)]
-        t0 = time.time()
-        eng.run(reqs)
-        dt = time.time() - t0
-        tps = eng.stats["decode_tokens"] / max(eng.stats["decode_s"], 1e-9)
-        rows.append((f"serving/{'int8pot' if quant else 'bf16'}", dt * 1e6,
-                     f"decode_tok_s={tps:.1f};"
-                     f"prefill_tok={eng.stats['prefill_tokens']}"))
+        for rate in rates:
+            rng = np.random.default_rng(0)          # seeded arrival stream
+            eng = ServeEngine(cfg, params, max_batch=4, max_context=64,
+                              eos_id=-1, quantized=quant, prefill_chunk=16,
+                              admission="truncate")
+            # warm the jitted prefill/decode dispatches so the replay times
+            # steady-state serving, not compilation
+            eng.run([Request(rid=-1, prompt=np.arange(4, dtype=np.int32),
+                             max_new_tokens=2)])
+            arrive = np.cumsum(rng.exponential(1.0 / rate, n_req))
+            reqs = [Request(rid=i,
+                            prompt=rng.integers(
+                                0, cfg.vocab,
+                                int(rng.integers(4, 24))).astype(np.int32),
+                            max_new_tokens=max_new) for i in range(n_req)]
+            t0, i = time.time(), 0
+            while i < n_req or eng.queue or eng.slots:
+                elapsed = time.time() - t0
+                while i < n_req and arrive[i] <= elapsed:
+                    eng.submit(reqs[i])
+                    i += 1
+                if not (eng.queue or eng.slots):
+                    time.sleep(min(max(arrive[i] - elapsed, 0.0), 0.01))
+                    continue
+                eng.step()
+            wall = time.time() - t0
+            s = summarize(reqs)
+            tag = "int8pot" if quant else "bf16"
+            rows.append((f"serving/{tag}/rate{rate:g}", wall * 1e6,
+                         f"decode_tok_s={s['decode_tok_s']:.1f};"
+                         f"first_tok_p50_ms={s['p50_first_token_s']*1e3:.1f};"
+                         f"first_tok_p99_ms={s['p99_first_token_s']*1e3:.1f};"
+                         f"total_p50_ms={s['p50_total_s']*1e3:.1f};"
+                         f"total_p99_ms={s['p99_total_s']*1e3:.1f};"
+                         f"done={s['done']}"))
+            lanes.append({"quant": tag, "rate_rps": rate, "n_requests": n_req,
+                          "wall_s": wall, **s})
+    with open("BENCH_serve.json", "w") as f:
+        json.dump({"smoke": SMOKE, "arch": "qwen2-0.5b (reduced, 2L)",
+                   "max_batch": 4, "max_context": 64, "prefill_chunk": 16,
+                   "lanes": lanes}, f, indent=2)
+    rows.append(("serving/report", 0.0,
+                 f"wrote=BENCH_serve.json;lanes={len(lanes)}"))
     return rows
 
 

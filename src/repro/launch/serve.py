@@ -1,8 +1,11 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Builds the engine (optionally int8-PoT quantized — the paper's technique as
-a serving flag) and serves a demo request batch, reporting prefill/decode
-throughput.
+Builds the paged serving engine (optionally int8-PoT quantized — the
+paper's technique as a serving flag), serves a demo request batch through
+the admission queue, and reports per-request latency percentiles plus
+prefill/decode throughput.  ``--engine reference`` runs the retained
+continuous-batching-lite engine instead (any model family);
+``--data-parallel`` shards the decode step over every visible device.
 """
 from __future__ import annotations
 
@@ -13,7 +16,8 @@ import jax
 import numpy as np
 
 from repro.nn import Model, get_config
-from repro.runtime.serve import Request, ServeEngine
+from repro.runtime.serve import (ReferenceEngine, Request, ServeEngine,
+                                 summarize)
 
 
 def main(argv=None):
@@ -23,10 +27,21 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="KV slots (paged) / decode batch (reference)")
     ap.add_argument("--context", type=int, default=128)
     ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--admission", choices=("reject", "truncate"),
+                    default="truncate")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request queue deadline in seconds")
+    ap.add_argument("--engine", choices=("paged", "reference"),
+                    default="paged")
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="shard_map the decode step over all devices")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -34,26 +49,45 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, max_batch=args.batch,
-                      max_context=args.context, eos_id=-1,
-                      quantized=args.quantized,
-                      temperature=args.temperature)
+    if args.engine == "reference" or cfg.family not in ("dense", "moe"):
+        eng = ReferenceEngine(cfg, params, max_batch=args.batch,
+                              max_context=args.context, eos_id=-1,
+                              quantized=args.quantized,
+                              temperature=args.temperature,
+                              admission=args.admission)
+    else:
+        eng = ServeEngine(cfg, params, max_batch=args.batch,
+                          max_context=args.context, eos_id=-1,
+                          quantized=args.quantized, quant_bits=args.bits,
+                          temperature=args.temperature,
+                          prefill_chunk=args.prefill_chunk,
+                          admission=args.admission,
+                          data_parallel=args.data_parallel)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab, args.prompt_len)
                     .astype(np.int32),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=args.max_new,
+                    deadline_s=args.deadline)
             for i in range(args.requests)]
     t0 = time.time()
     eng.run(reqs)
     wall = time.time() - t0
     print(f"served {len(reqs)} requests in {wall:.2f}s "
-          f"(quantized={args.quantized})")
+          f"(engine={args.engine}, quantized={args.quantized})")
     print(f"prefill: {eng.stats['prefill_tokens']} tok in "
           f"{eng.stats['prefill_s']:.2f}s; decode: "
           f"{eng.stats['decode_tokens']} tok in {eng.stats['decode_s']:.2f}s "
           f"({eng.stats['decode_tokens']/max(eng.stats['decode_s'],1e-9):.1f}"
           f" tok/s)")
+    if isinstance(eng, ServeEngine):
+        s = summarize(reqs)
+        print(f"latency: first-token p50={s['p50_first_token_s']*1e3:.1f}ms "
+              f"p99={s['p99_first_token_s']*1e3:.1f}ms; total "
+              f"p50={s['p50_total_s']*1e3:.1f}ms "
+              f"p99={s['p99_total_s']*1e3:.1f}ms; "
+              f"done={s['done']} rejected={s['rejected']} "
+              f"expired={s['expired']} truncated={s['truncated']}")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.out_tokens}")
 

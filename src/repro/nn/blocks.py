@@ -100,7 +100,9 @@ def attention_seq(p, x, cfg: ArchConfig, *, positions=None, window: int = 0,
 
 def attention_step(p, x, cache, pos, cfg: ArchConfig, *, window: int = 0,
                    pin=None, pin_q=None):
-    """One decode token. cache: {k: (B,C,Hkv,D), v: ...}; pos: scalar int.
+    """One decode token. cache: {k: (B,C,Hkv,D), v: ...}; pos: scalar int or
+    a per-row (B,) vector (paged serving: every slot decodes at its own
+    sequence position).
 
     Full attention: C = max context, write index = pos.
     Local attention: C = window, ring buffer, write index = pos % C.
@@ -111,15 +113,25 @@ def attention_step(p, x, cache, pos, cfg: ArchConfig, *, window: int = 0,
     B = x.shape[0]
     hd = cfg.head_dim_
     q, k, v = _qkv(p, x, cfg)
-    posv = jnp.full((B, 1), pos)
+    pos = jnp.asarray(pos)
+    posv = jnp.full((B, 1), pos) if pos.ndim == 0 else pos.reshape(B, 1)
     q = rope(q, posv, cfg.rope_theta)
     k = rope(k, posv, cfg.rope_theta)
     C = cache["k"].shape[1]
-    slot = pos % C
-    k_cache = jax.lax.dynamic_update_slice(
-        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(
-        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    if pos.ndim == 0:
+        slot = pos % C
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    else:
+        # per-row scatter: row b writes its token at its own position
+        rows = jnp.arange(B)
+        slot = posv[:, 0] % C
+        k_cache = cache["k"].at[rows, slot].set(
+            k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[rows, slot].set(
+            v[:, 0].astype(cache["v"].dtype))
     if pin is not None:
         k_cache, v_cache = pin(k_cache), pin(v_cache)
     if pin_q is not None:
@@ -127,7 +139,8 @@ def attention_step(p, x, cache, pos, cfg: ArchConfig, *, window: int = 0,
         # einsum inherits head-sharding from wq and GSPMD all-gathers the
         # seq-sharded cache every layer (S Perf iteration 4)
         q = pin_q(q)
-    cache_len = jnp.minimum(pos + 1, C)
+    cache_len = jnp.minimum(posv[:, 0] + 1, C) if pos.ndim \
+        else jnp.minimum(pos + 1, C)
     out = decode_attention(q, k_cache, v_cache, cache_len, window=0)
     out = out.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
     return out, {"k": k_cache, "v": v_cache}

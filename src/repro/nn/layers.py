@@ -149,6 +149,35 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return out[:, :Sq].astype(q.dtype)
 
 
+def chunk_cache_attention(q, k_cache, v_cache, q_pos):
+    """Prompt-chunk attention against a paged KV cache row.
+
+    q: (B, c, Hq, D) chunk queries; caches: (B, C, Hkv, D); q_pos: (c,) the
+    GLOBAL positions of the chunk queries (the chunk's K/V must already be
+    written into the cache at those positions).  Each query attends causally
+    to every cache position <= its own global position — older chunks, the
+    chunk prefix, and itself; right-pad queries land beyond every real
+    position so their rows are garbage the caller must ignore.
+
+    Like ``decode_attention``, GQA runs as a GROUPED einsum (never
+    materializes head-repeated K/V), so a sequence-sharded cache keeps its
+    layout (S Perf iteration 4 applies unchanged to the chunk path).
+    """
+    B, c, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, c, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(S)[None, :] <= q_pos[:, None]            # (c, S)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, c, Hq, D).astype(q.dtype)
+
+
 def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
     """Single-token attention against a cache.
 

@@ -531,8 +531,72 @@ class Model:
             return logits.astype(jnp.float32), cache
         raise NotImplementedError(cfg.family)
 
+    def prefill_chunk(self, params, cache, tokens, slot, offset, n_valid):
+        """Chunked prompt ingestion into ONE slot of a paged decode cache.
+
+        tokens: (1, c) int32, right-padded chunk of a prompt; ``slot`` the
+        cache row to fill, ``offset`` the global position of tokens[0, 0],
+        ``n_valid`` <= c the real token count.  Writes the chunk's K/V into
+        ``cache`` rows [slot, offset:offset+c) and returns (logits at the
+        last valid position, (1, V) f32; updated cache).  Padded tail
+        positions ARE written (fixed chunk shapes keep one compiled
+        executable) but land beyond every real query position, so they are
+        masked by the chunk attention and later overwritten in place by the
+        next chunk or decode write before the slot length ever reaches them.
+
+        Supports the standard-KV families (dense / moe).  Exactness: for
+        dense models the chunk outputs are bitwise independent of the chunk
+        size (attention row i sees exactly cache[0..offset+i], all other ops
+        are position-local); for MoE the capacity bound C = ceil(cf*c*K/E)
+        applies per chunk, so chunking can change which tokens are dropped —
+        the engine documents this as the chunked-prefill capacity caveat.
+        """
+        from .layers import chunk_cache_attention, rope
+        cfg = self.cfg
+        if cfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"prefill_chunk supports standard-KV families, not "
+                f"{cfg.family!r} (use Model.prefill / ReferenceEngine)")
+        c = tokens.shape[1]
+        x = params["embed"].astype(self.dtype)[tokens]            # (1,c,d)
+        positions = offset + jnp.arange(c)                         # (c,)
+
+        def body(h, inp):
+            pl, kv = inp                       # kv: (B, C, Hkv, D) full page
+            hn = rms_norm(h, pl["ln1"].astype(h.dtype), cfg.norm_eps)
+            q, k, v = blocks._qkv(pl["attn"], hn, cfg)
+            q = rope(q, positions[None, :], cfg.rope_theta)
+            k = rope(k, positions[None, :], cfg.rope_theta)
+            kc = jax.lax.dynamic_update_slice(
+                kv["k"], k.astype(kv["k"].dtype), (slot, offset, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                kv["v"], v.astype(kv["v"].dtype), (slot, offset, 0, 0))
+            C = kc.shape[1]
+            hd = cfg.head_dim_
+            krow = jax.lax.dynamic_slice(
+                kc, (slot, 0, 0, 0), (1, C, cfg.n_kv_heads, hd))
+            vrow = jax.lax.dynamic_slice(
+                vc, (slot, 0, 0, 0), (1, C, cfg.n_kv_heads, hd))
+            a = chunk_cache_attention(q, krow, vrow, positions)
+            h = h + a.reshape(1, c, -1) @ pl["attn"]["wo"].astype(h.dtype)
+            hn = rms_norm(h, pl["ln2"].astype(h.dtype), cfg.norm_eps)
+            if cfg.n_experts:
+                y, _ = blocks.moe_apply(pl["moe"], hn, cfg)
+            else:
+                y = blocks.mlp_apply(pl["mlp"], hn)
+            return h + y, {"k": kc, "v": vc}
+
+        x, new_cache = jax.lax.scan(
+            body, x, (params["layers"], {"k": cache["k"], "v": cache["v"]}),
+            unroll=_unroll(cfg.n_layers))
+        x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+        xl = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        logits = xl @ params["lm_head"].astype(x.dtype)
+        return logits.astype(jnp.float32)[:, 0], new_cache
+
     def decode_step(self, params, cache, tokens, pos):
-        """One token for the whole batch. tokens: (B, 1); pos: scalar int32."""
+        """One token for the whole batch. tokens: (B, 1); pos: scalar int32
+        or a (B,) per-row position vector (paged serving)."""
         cfg = self.cfg
         hd = cfg.head_dim_
         x = params["embed"].astype(self.dtype)[tokens]         # (B,1,d)

@@ -1,2 +1,2 @@
 from .ptq import (dequant, min_bitwidth_search, quant_bytes, quantize_tree,  # noqa: F401
-                  sls_rescale)
+                  serving_quant, sls_rescale)

@@ -31,7 +31,7 @@ import numpy as np
 from repro.kernels.ops import quantize_pot
 
 __all__ = ["quantize_tree", "dequant", "min_bitwidth_search", "sls_rescale",
-           "quant_bytes", "pack_int4", "unpack_int4"]
+           "quant_bytes", "pack_int4", "unpack_int4", "serving_quant"]
 
 _SKIP_SUBSTR = ("ln", "norm", "router", "gate_i", "gate_r", "lam", "mu",
                 "u", "w0", "bias", "bq", "bk", "bv")
@@ -89,7 +89,9 @@ def dequant(qtree, dtype=jnp.bfloat16):
     def d(leaf):
         if _is_qleaf(leaf):
             q = leaf["q"]
-            if leaf.get("packed"):
+            # key presence, not value: the value is a tracer when the qtree
+            # is a jit argument (the serving engines' dequant-inside-dispatch)
+            if "packed" in leaf:
                 q = unpack_int4(q)
             return (q.astype(jnp.float32)
                     * jnp.exp2(-leaf["exp"].astype(jnp.float32))
@@ -109,6 +111,26 @@ def quant_bytes(tree) -> int:
         else:
             total += leaf.size * leaf.dtype.itemsize
     return total
+
+
+def serving_quant(params, *, bits: int = 8, dtype=jnp.bfloat16):
+    """Serve-side hook: quantize once, return the resident representation.
+
+    Returns ``(qtree, deq, resident_bytes)`` where ``qtree`` is the int8-PoT
+    (or nibble-packed int4) tree the engine keeps in HBM, ``deq`` is a
+    jit-composable closure the engine calls INSIDE its prefill/decode
+    dispatches (exact PoT dequant at the requested activation dtype), and
+    ``resident_bytes`` is the serving footprint (``quant_bytes``).  Both
+    serving engines build their quantized path from this one hook, so the
+    bit ladder chosen by :func:`min_bitwidth_search` plugs straight into
+    serving via ``bits=``.
+    """
+    qt = quantize_tree(params, bits=bits)
+
+    def deq(tree):
+        return dequant(tree, dtype=dtype)
+
+    return qt, deq, quant_bytes(qt)
 
 
 def _eval_many_default(eval_fn):

@@ -1,0 +1,171 @@
+"""Slot-paged KV cache + the pure serving scheduler (DESIGN.md 13).
+
+Two halves, deliberately separated so the scheduling policy is testable
+without a model:
+
+* :class:`PagedKVCache` — a fixed-capacity pool of ``n_slots`` cache rows of
+  ``max_context`` positions each, holding the model's decode cache pytree
+  (leaves shaped ``(L, n_slots, max_context, ...)``).  Slots are allocated to
+  requests at admission and reused the moment a request finishes — no
+  whole-batch re-padding, ever.  Per-slot position counters live host-side
+  (``lengths``); the device pytree is only ever updated in place by the
+  jitted prefill-chunk / decode dispatches.
+
+* Pure scheduler functions — :func:`admit`, :func:`assign_slots`,
+  :func:`expire` — and :func:`simulate`, a host-side oracle that replays an
+  abstract event stream (arrivals, finishes) through exactly the same
+  FIFO + deadline + lowest-free-slot policy the engine uses.  The serving
+  tests property-check the oracle (no slot double-booking, no starvation,
+  deadline ordering) and then assert the live engine's event log matches the
+  oracle's decisions on the same stream.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["ADMIT_OK", "ADMIT_TRUNCATE", "ADMIT_REJECT", "admit",
+           "assign_slots", "expire", "simulate", "PagedKVCache"]
+
+ADMIT_OK = "ok"
+ADMIT_TRUNCATE = "truncate"
+ADMIT_REJECT = "reject"
+
+
+def admit(prompt_len: int, max_context: int, policy: str = "reject"):
+    """Admission control for one prompt. Returns (verdict, effective_len).
+
+    A prompt must leave at least one cache position free for the decode
+    write, so the admissible prompt length is ``max_context - 1``.  Longer
+    prompts are rejected (``policy="reject"``) or truncated to their TAIL
+    (``policy="truncate"`` — the most recent context is what conditions
+    generation).  This is the fix for the seed engine's overflow: ``_pad_kv``
+    assumed S <= max_context and longer prompts silently corrupted the cache.
+    """
+    limit = max_context - 1
+    if prompt_len <= limit:
+        return ADMIT_OK, prompt_len
+    if policy == "truncate":
+        return ADMIT_TRUNCATE, limit
+    if policy == "reject":
+        return ADMIT_REJECT, 0
+    raise ValueError(f"unknown admission policy {policy!r}")
+
+
+def assign_slots(queue, free_slots):
+    """FIFO slot assignment: i-th queued request -> i-th lowest free slot.
+
+    ``queue`` is an ordered sequence of request ids (arrival order);
+    ``free_slots`` any iterable of free slot ids.  Returns [(rid, slot)] for
+    as many requests as there are slots — the head of the queue is never
+    skipped, which is what makes the policy starvation-free.
+    """
+    return list(zip(queue, sorted(free_slots)))
+
+
+def expire(queue_meta, now):
+    """Deadline pass over queued requests.
+
+    ``queue_meta``: ordered [(rid, arrival_t, deadline_t-or-None)];
+    ``now``: current time.  Returns (expired_rids, remaining_meta): a queued
+    request expires when ``now >= deadline_t``.  Expirations are reported in
+    arrival order (the queue's order), so earlier-arrived requests with
+    lapsed deadlines always expire first.
+    """
+    expired, remaining = [], []
+    for rid, arrival, deadline in queue_meta:
+        if deadline is not None and now >= deadline:
+            expired.append(rid)
+        else:
+            remaining.append((rid, arrival, deadline))
+    return expired, remaining
+
+
+def simulate(arrivals, finishes, n_slots: int, *, deadlines=None,
+             horizon: int | None = None):
+    """Host-side scheduler oracle: abstract events in, decision log out.
+
+    ``arrivals``: [(t, rid)] (t integer step of submission, pre-admission
+    filtering is the caller's problem — feed only admitted requests);
+    ``finishes``: {rid: t} the step each running request releases its slot;
+    ``deadlines``: {rid: absolute expiry step} for queued-timeout requests.
+    Replays the engine's per-step order — expire, assign, then releases — and
+    returns [(t, action, rid, slot)] with actions "assign" / "expire" /
+    "release" (slot is None for "expire").  A request with no finish entry
+    holds its slot forever (the starvation probe).
+    """
+    deadlines = deadlines or {}
+    arrivals = sorted(arrivals)
+    if horizon is None:
+        horizon = max([t for t, _ in arrivals] +
+                      list(finishes.values()) + [0]) + 1
+    queue: list = []          # [(rid, arrival, deadline)]
+    free = list(range(n_slots))
+    slot_of: dict = {}
+    log = []
+    ai = 0
+    for t in range(horizon + 1):
+        while ai < len(arrivals) and arrivals[ai][0] <= t:
+            rid = arrivals[ai][1]
+            queue.append((rid, arrivals[ai][0], deadlines.get(rid)))
+            ai += 1
+        expired, queue = expire(queue, t)
+        for rid in expired:
+            log.append((t, "expire", rid, None))
+        for rid, slot in assign_slots([r for r, _, _ in queue], free):
+            assert slot not in slot_of.values(), "double-booked slot!"
+            slot_of[rid] = slot
+            free.remove(slot)
+            queue = [q for q in queue if q[0] != rid]
+            log.append((t, "assign", rid, slot))
+        for rid, tf in finishes.items():
+            if tf == t and rid in slot_of:
+                slot = slot_of.pop(rid)
+                free.append(slot)
+                log.append((t, "release", rid, slot))
+    return log
+
+
+class PagedKVCache:
+    """Fixed-capacity slot pool around a model decode-cache pytree.
+
+    The device pytree (``.data``) is built once via ``model.init_cache`` with
+    batch = ``n_slots`` and context = ``max_context`` and thereafter only
+    rewritten by the jitted serving dispatches — allocation and release are
+    pure host-side bookkeeping (a slot's stale contents are never read:
+    every read is masked by the slot's length, and every position is
+    rewritten in place before the length crosses it).
+    """
+
+    def __init__(self, model, n_slots: int, max_context: int):
+        self.data = model.init_cache(n_slots, max_context)
+        self.n_slots = n_slots
+        self.max_context = max_context
+        self.lengths = np.zeros(n_slots, np.int64)   # valid tokens per slot
+        self._free = list(range(n_slots))
+        self.owner: dict = {}                        # slot -> rid
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def free_slots(self):
+        return sorted(self._free)
+
+    def alloc(self, rid: int) -> int:
+        """Claim the lowest free slot for ``rid``; resets its length."""
+        if not self._free:
+            raise RuntimeError("no free KV slots")
+        self._free.sort()
+        slot = self._free.pop(0)
+        assert slot not in self.owner, f"slot {slot} double-booked"
+        self.owner[slot] = rid
+        self.lengths[slot] = 0
+        return slot
+
+    def release(self, slot: int) -> None:
+        """Return a slot to the pool (its device rows are reused as-is)."""
+        assert slot in self.owner, f"slot {slot} not allocated"
+        del self.owner[slot]
+        self.lengths[slot] = 0
+        self._free.append(slot)

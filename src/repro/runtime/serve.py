@@ -1,14 +1,34 @@
-"""Batched serving loop: prefill + decode with KV cache, PTQ optional.
+"""Paged-slot serving engine: chunked prefill, admission queue, slot reuse.
 
-A continuous-batching-lite engine: fixed decode batch; finished sequences
-(EOS or max tokens) are replaced by queued requests at the next prefill
-refresh.  Greedy or temperature sampling.  With ``quantized=True`` the big
-matmul weights serve as int8-PoT (repro.quant) — the paper's technique as a
-first-class serving feature.
+The production engine (DESIGN.md 13).  ``ServeEngine`` replaces the seed's
+"continuous-batching-lite" loop (kept verbatim below as
+:class:`ReferenceEngine`, the parity oracle) with:
+
+* a slot-based paged KV cache (:class:`repro.runtime.kvcache.PagedKVCache`):
+  fixed ``max_batch`` x ``max_context`` capacity, per-slot position
+  counters, slot reuse the moment a request finishes — no whole-batch
+  ``_pad_kv`` re-padding;
+* decoupled prefill / decode dispatches with CHUNKED prefill: at most one
+  prompt chunk is ingested per engine step, so a long prompt never stalls
+  the resident decode batch, and finished slots refill mid-stream;
+* a request queue with admission control (reject/truncate prompts beyond
+  ``max_context``, per-request queue deadlines, FIFO by arrival) and
+  per-request latency stats (queue_s, prefill_s, first_token_s, decode
+  tokens/s);
+* a vectorized counted-PRNG sampler: one jitted Gumbel-argmax draw keyed on
+  (seed, rid, token index), so sampled streams are reproducible across runs
+  AND across batch compositions;
+* optional ``shard_map`` data parallelism over the decode step (slots
+  sharded across mesh devices, params replicated — the eval-layer idiom).
+
+With ``quantized=True`` the matmul weights serve as int8-PoT (repro.quant);
+dequantization happens INSIDE the jitted dispatches so the resident bytes
+really are the quantized ones — the paper's thesis at serving scale.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -17,9 +37,11 @@ import numpy as np
 
 from repro.nn.model import Model
 from repro.nn.types import ArchConfig
-from repro.quant import dequant, quantize_tree
+from repro.quant import serving_quant
+from repro.runtime import kvcache
+from repro.runtime.kvcache import ADMIT_REJECT, ADMIT_TRUNCATE, PagedKVCache
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "ReferenceEngine", "Request", "summarize"]
 
 
 @dataclass
@@ -27,42 +49,373 @@ class Request:
     rid: int
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 32
+    deadline_s: float | None = None   # max queue wait before expiry
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    # lifecycle: new -> queued -> running -> done | rejected | expired
+    status: str = "new"
+    truncated: bool = False
+    arrival_s: float = 0.0
+    stats: dict = field(default_factory=dict)
+
+
+def summarize(requests) -> dict:
+    """p50/p99 latency + throughput over a served request list.
+
+    Reads the per-request ``stats`` the paged engine fills in: total_s
+    (arrival -> done), first_token_s (arrival -> first sampled token), and
+    decode_tokens/decode_s.  Rejected/expired requests count in their own
+    buckets and are excluded from the percentiles.
+    """
+    done = [r for r in requests if r.status == "done"]
+
+    def pct(key, p):
+        xs = sorted(r.stats[key] for r in done if key in r.stats)
+        if not xs:
+            return 0.0
+        return xs[min(len(xs) - 1, int(round(p / 100 * (len(xs) - 1))))]
+
+    dec_tok = sum(r.stats.get("decode_tokens", 0) for r in done)
+    dec_s = max((r.stats.get("decode_s", 0.0) for r in done), default=0.0)
+    return {
+        "n": len(requests), "done": len(done),
+        "rejected": sum(r.status == "rejected" for r in requests),
+        "expired": sum(r.status == "expired" for r in requests),
+        "truncated": sum(r.truncated for r in requests),
+        "p50_total_s": pct("total_s", 50), "p99_total_s": pct("total_s", 99),
+        "p50_first_token_s": pct("first_token_s", 50),
+        "p99_first_token_s": pct("first_token_s", 99),
+        "decode_tokens": dec_tok,
+        "decode_tok_s": dec_tok / dec_s if dec_s > 0 else 0.0,
+    }
+
+
+@dataclass
+class _Slot:
+    """Host-side state of one cache slot while a request runs in it."""
+    req: Request
+    n_prefilled: int = 0          # prompt tokens already ingested
+    phase: str = "prefill"        # prefill -> decode
+    assigned_s: float = 0.0
+    seq: int = 0                  # assignment sequence (prefill FIFO order)
 
 
 class ServeEngine:
+    """Slot-paged serving engine for the standard-KV families (dense/moe)."""
+
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  max_context: int = 512, eos_id: int = 0,
-                 quantized: bool = False, temperature: float = 0.0,
-                 seed: int = 0):
+                 quantized: bool = False, quant_bits: int = 8,
+                 temperature: float = 0.0, seed: int = 0,
+                 prefill_chunk: int = 64, admission: str = "reject",
+                 data_parallel: bool = False, mesh=None,
+                 clock=time.monotonic):
+        if cfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"paged serving supports standard-KV families, not "
+                f"{cfg.family!r} — use ReferenceEngine")
         self.cfg = cfg
         self.model = Model(cfg)
         self.max_batch = max_batch
         self.max_context = max_context
         self.eos_id = eos_id
         self.temperature = temperature
-        self.rng = np.random.default_rng(seed)
+        self.admission = admission
+        self.prefill_chunk = min(prefill_chunk, max_context)
+        self.clock = clock
+        self._key = jax.random.PRNGKey(seed)
+        dt = jnp.dtype(cfg.dtype)
         if quantized:
             # weights live in HBM as int8 + PoT exponents; dequantization
             # happens INSIDE the jitted steps (exact: PoT scales), so the
             # resident bytes really are the quantized ones (cf. quant_bytes)
-            self.quant_tree = quantize_tree(params)
+            self.quant_tree, deq, self.quant_bytes = serving_quant(
+                params, bits=quant_bits, dtype=dt)
             self.params = self.quant_tree
-            dt = jnp.dtype(cfg.dtype)
+        else:
+            self.params = params
+            self.quant_tree = None
+            self.quant_bytes = None
+            deq = lambda t: t                                   # noqa: E731
+        self.cache = PagedKVCache(self.model, max_batch, max_context)
+        self._decode = self._build_decode(deq, data_parallel, mesh)
+        self._prefill = jax.jit(
+            lambda pt, cache, tok, slot, off, n: self.model.prefill_chunk(
+                deq(pt), cache, tok, slot, off, n))
+        self._draw = jax.jit(jax.vmap(self._draw_one))
+        self.queue: deque = deque()        # FIFO admitted requests
+        self.slots: dict = {}              # slot id -> _Slot
+        self.events: list = []             # (step, action, rid, slot)
+        self._step_idx = 0
+        self._seq = 0
+        self.stats = {"prefill_tokens": 0, "decode_tokens": 0,
+                      "prefill_s": 0.0, "decode_s": 0.0,
+                      "prefill_chunks": 0, "decode_steps": 0, "steps": 0,
+                      "admitted": 0, "rejected": 0, "truncated": 0,
+                      "expired": 0, "finished": 0}
+
+    # ------------------------------------------------------------ dispatches
+    def _build_decode(self, deq, data_parallel: bool, mesh):
+        def step(pt, cache, tok, pos):
+            return self.model.decode_step(deq(pt), cache, tok, pos)
+
+        if not data_parallel:
+            return jax.jit(step)
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        if mesh is None:
+            mesh = Mesh(np.array(jax.devices()), ("data",))
+        ndev = mesh.devices.size
+        if self.max_batch % ndev:
+            raise ValueError(f"max_batch={self.max_batch} must divide over "
+                             f"{ndev} devices for data-parallel decode")
+        # eval-layer idiom (DESIGN.md 7.4): shard the batch-like dim, keep
+        # params replicated; the decode step is row-independent so no
+        # collective is needed — out_specs reassemble logits and cache.
+        row = jax.tree.map(
+            lambda l: P(None, "data", *([None] * (l.ndim - 2))),
+            self.cache.data)
+        rep = jax.tree.map(lambda _: P(), self.params)
+        fn = shard_map(step, mesh=mesh,
+                       in_specs=(rep, row, P("data", None), P("data")),
+                       out_specs=(P("data", None, None), row),
+                       check_rep=False)
+        return jax.jit(fn)
+
+    def _draw_one(self, rid, step, logits):
+        """Counted-PRNG temperature sample: key = f(seed, rid, token idx).
+
+        One Gumbel-argmax per row, vmapped into a single vectorized draw —
+        the stream each request sees depends only on (seed, rid, step),
+        never on which other requests share the batch.
+        """
+        k = jax.random.fold_in(jax.random.fold_in(self._key, rid), step)
+        g = jax.random.gumbel(k, logits.shape)
+        return jnp.argmax(logits / self.temperature + g)
+
+    def _sample(self, logits: np.ndarray, rids, steps) -> np.ndarray:
+        """logits: (B, V) f32; rids/steps: per-row (B,) int arrays."""
+        if self.temperature <= 0:
+            return np.argmax(logits, axis=-1)
+        return np.asarray(self._draw(jnp.asarray(rids, jnp.uint32),
+                                     jnp.asarray(steps, jnp.uint32),
+                                     jnp.asarray(logits)))
+
+    # ------------------------------------------------------------- frontend
+    def _now(self, now):
+        return self.clock() if now is None else now
+
+    def submit(self, req: Request, now=None) -> str:
+        """Admission: reject/truncate over-long prompts, then enqueue FIFO."""
+        now = self._now(now)
+        verdict, eff = kvcache.admit(len(req.prompt), self.max_context,
+                                     self.admission)
+        if verdict == ADMIT_REJECT:
+            req.status = "rejected"
+            req.done = True
+            self.stats["rejected"] += 1
+            self.events.append((self._step_idx, "reject", req.rid, None))
+            return req.status
+        if verdict == ADMIT_TRUNCATE:
+            req.prompt = np.asarray(req.prompt)[-eff:]   # keep the tail
+            req.truncated = True
+            self.stats["truncated"] += 1
+            self.events.append((self._step_idx, "truncate", req.rid, None))
+        # decode writes reach position len(prompt) + max_new - 2; cap so the
+        # slot never wraps (the seed engine's overflow, fixed at admission)
+        req.stats["max_new_eff"] = min(
+            req.max_new_tokens, self.max_context + 1 - len(req.prompt))
+        req.status = "queued"
+        req.arrival_s = now
+        self.stats["admitted"] += 1
+        self.queue.append(req)
+        self.events.append((self._step_idx, "admit", req.rid, None))
+        return req.status
+
+    # ------------------------------------------------------------ main loop
+    def step(self, now=None) -> list:
+        """One scheduling iteration: expire -> refill slots -> one prefill
+        chunk -> one decode step over every decoding slot.  Returns requests
+        finished this step."""
+        now = self._now(now)
+        self._step_idx += 1
+        self.stats["steps"] += 1
+        self._expire(now)
+        self._assign(now)
+        self._prefill_step(now)
+        return self._decode_step(now)
+
+    def run(self, requests: list) -> list:
+        """Serve a list of Requests to completion; returns them filled."""
+        for r in requests:
+            self.submit(r)
+        while self.queue or self.slots:
+            self.step()
+        return requests
+
+    def _expire(self, now):
+        meta = [(r.rid, r.arrival_s,
+                 None if r.deadline_s is None else r.arrival_s + r.deadline_s)
+                for r in self.queue]
+        expired, _ = kvcache.expire(meta, now)
+        if not expired:
+            return
+        dead = set(expired)
+        for r in list(self.queue):
+            if r.rid in dead:
+                self.queue.remove(r)
+                r.status = "expired"
+                r.done = True
+                r.stats["queue_s"] = now - r.arrival_s
+                self.stats["expired"] += 1
+                self.events.append((self._step_idx, "expire", r.rid, None))
+
+    def _assign(self, now):
+        while self.queue and self.cache.n_free:
+            r = self.queue.popleft()
+            slot = self.cache.alloc(r.rid)
+            r.status = "running"
+            r.stats["queue_s"] = now - r.arrival_s
+            self.slots[slot] = _Slot(req=r, assigned_s=now, seq=self._seq)
+            self._seq += 1
+            self.events.append((self._step_idx, "assign", r.rid, slot))
+
+    def _prefill_step(self, now):
+        """Ingest ONE chunk of the oldest still-prefilling prompt."""
+        pending = [(st.seq, slot) for slot, st in self.slots.items()
+                   if st.phase == "prefill"]
+        if not pending:
+            return
+        _, slot = min(pending)
+        st = self.slots[slot]
+        r = st.req
+        chunk = self.prefill_chunk
+        n = min(chunk, len(r.prompt) - st.n_prefilled)
+        toks = np.zeros((1, chunk), np.int32)
+        toks[0, :n] = r.prompt[st.n_prefilled:st.n_prefilled + n]
+        t0 = time.time()
+        logits, self.cache.data = self._prefill(
+            self.params, self.cache.data, jnp.asarray(toks),
+            jnp.int32(slot), jnp.int32(st.n_prefilled), jnp.int32(n))
+        logits = np.asarray(logits)
+        dt = time.time() - t0
+        self.stats["prefill_s"] += dt
+        self.stats["prefill_tokens"] += n
+        self.stats["prefill_chunks"] += 1
+        r.stats["prefill_s"] = r.stats.get("prefill_s", 0.0) + dt
+        st.n_prefilled += n
+        self.cache.lengths[slot] = st.n_prefilled
+        if st.n_prefilled < len(r.prompt):
+            return
+        # prompt fully ingested: sample the first token from the chunk's
+        # last-position logits (token index 0; EOS is deliberately NOT
+        # checked here — the reference engine ignores a first-token EOS and
+        # parity pins that behavior)
+        tok = int(self._sample(logits, np.array([r.rid]), np.array([0]))[0])
+        r.out_tokens.append(tok)
+        t_first = self._now(None)
+        r.stats["first_token_s"] = t_first - r.arrival_s
+        st.phase = "decode"
+        if len(r.out_tokens) >= r.stats["max_new_eff"]:
+            self._finish(slot, t_first)
+
+    def _decode_step(self, now):
+        """One decode token for EVERY decoding slot in a single fixed-shape
+        dispatch.  Idle/prefilling slots ride along as dummy rows: their
+        write position is their own next-write index, so the garbage they
+        deposit is always overwritten before the slot length reaches it."""
+        active = [slot for slot, st in self.slots.items()
+                  if st.phase == "decode"]
+        if not active:
+            return []
+        B = self.max_batch
+        toks = np.zeros((B, 1), np.int32)
+        pos = np.minimum(self.cache.lengths.copy(), self.max_context - 1)
+        rids = np.zeros(B, np.int64)
+        steps = np.zeros(B, np.int64)
+        for slot in active:
+            r = self.slots[slot].req
+            toks[slot, 0] = r.out_tokens[-1]
+            pos[slot] = self.cache.lengths[slot]
+            rids[slot] = r.rid
+            steps[slot] = len(r.out_tokens)
+        t0 = time.time()
+        lg, self.cache.data = self._decode(
+            self.params, self.cache.data, jnp.asarray(toks),
+            jnp.asarray(pos, jnp.int32))
+        lg = np.asarray(lg)[:, 0]
+        dt = time.time() - t0
+        self.stats["decode_s"] += dt
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += len(active)
+        nxt = self._sample(lg, rids, steps)
+        t_done = self._now(None)
+        finished = []
+        for slot in active:
+            st = self.slots[slot]
+            r = st.req
+            self.cache.lengths[slot] += 1     # the fed token's KV was written
+            tok = int(nxt[slot])
+            r.out_tokens.append(tok)
+            r.stats["decode_tokens"] = r.stats.get("decode_tokens", 0) + 1
+            r.stats["decode_s"] = r.stats.get("decode_s", 0.0) + dt
+            if tok == self.eos_id or \
+                    len(r.out_tokens) >= r.stats["max_new_eff"]:
+                finished.append(r)
+                self._finish(slot, t_done)
+        return finished
+
+    def _finish(self, slot, now):
+        st = self.slots.pop(slot)
+        r = st.req
+        r.done = True
+        r.status = "done"
+        r.stats["total_s"] = now - r.arrival_s
+        dec_s = r.stats.get("decode_s", 0.0)
+        r.stats["decode_tok_s"] = (r.stats.get("decode_tokens", 0) / dec_s
+                                   if dec_s > 0 else 0.0)
+        self.cache.release(slot)
+        self.stats["finished"] += 1
+        self.events.append((self._step_idx, "release", r.rid, slot))
+
+
+class ReferenceEngine:
+    """The seed's continuous-batching-lite engine, retained as the parity
+    oracle: fixed decode batch, whole-batch left-padded prefill, `_pad_kv`
+    re-padding, batch refresh only at prefill boundaries.  Handles every
+    model family (the paged engine covers dense/moe).  The admission
+    overflow is fixed here too — prompts beyond ``max_context`` are rejected
+    or tail-truncated at enqueue instead of corrupting the cache."""
+
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
+                 max_context: int = 512, eos_id: int = 0,
+                 quantized: bool = False, temperature: float = 0.0,
+                 seed: int = 0, admission: str = "reject"):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.max_batch = max_batch
+        self.max_context = max_context
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.admission = admission
+        self.rng = np.random.default_rng(seed)
+        if quantized:
+            self.quant_tree, deq, _ = serving_quant(
+                params, dtype=jnp.dtype(cfg.dtype))
+            self.params = self.quant_tree
             self._decode = jax.jit(
                 lambda qt, cache, tok, pos: self.model.decode_step(
-                    dequant(qt, dtype=dt), cache, tok, pos))
+                    deq(qt), cache, tok, pos))
             self._prefill = jax.jit(
-                lambda qt, batch: self.model.prefill(dequant(qt, dtype=dt),
-                                                     batch))
+                lambda qt, batch: self.model.prefill(deq(qt), batch))
         else:
             self.params = params
             self.quant_tree = None
             self._decode = jax.jit(self.model.decode_step)
             self._prefill = jax.jit(self.model.prefill)
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0,
-                      "prefill_s": 0.0, "decode_s": 0.0}
+                      "prefill_s": 0.0, "decode_s": 0.0, "rejected": 0,
+                      "truncated": 0}
 
     def _sample(self, logits: np.ndarray) -> np.ndarray:
         if self.temperature <= 0:
@@ -75,7 +428,19 @@ class ServeEngine:
 
     def run(self, requests: list) -> list:
         """Serve a list of Requests to completion; returns them filled."""
-        queue = list(requests)
+        queue = []
+        for r in requests:
+            verdict, eff = kvcache.admit(len(r.prompt), self.max_context,
+                                         self.admission)
+            if verdict == ADMIT_REJECT:
+                r.status, r.done = "rejected", True
+                self.stats["rejected"] += 1
+                continue
+            if verdict == ADMIT_TRUNCATE:
+                r.prompt = np.asarray(r.prompt)[-eff:]
+                r.truncated = True
+                self.stats["truncated"] += 1
+            queue.append(r)
         while queue:
             batch = queue[:self.max_batch]
             queue = queue[self.max_batch:]
@@ -101,7 +466,8 @@ class ServeEngine:
         last = self._sample(np.asarray(logits)[:, -1])
         for i, r in enumerate(batch):
             r.out_tokens.append(int(last[i]))
-        max_new = max(r.max_new_tokens for r in batch)
+        max_new = max(min(r.max_new_tokens, self.max_context + 1 - S)
+                      for r in batch)
         t0 = time.time()
         for t in range(1, max_new):
             pos = jnp.int32(S + t - 1)
@@ -122,6 +488,7 @@ class ServeEngine:
         self.stats["decode_s"] += time.time() - t0
         for r in batch:
             r.done = True
+            r.status = "done"
 
     def _pad_kv(self, leaf):
         """Grow a prefill KV cache (L,B,S,H,D) to the serving context."""

@@ -1,0 +1,217 @@
+"""Pure scheduler + paged KV cache: unit tests, property tests of the
+host-side simulator oracle, and the engine-vs-oracle cross-check
+(DESIGN.md 13).  Seeded-numpy property cases always run; hypothesis widens
+the search when installed."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.runtime.kvcache import (ADMIT_OK, ADMIT_REJECT, ADMIT_TRUNCATE,
+                                   PagedKVCache, admit, assign_slots, expire,
+                                   simulate)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------------- unit: admit
+
+def test_admit_boundaries():
+    assert admit(15, 16) == (ADMIT_OK, 15)        # max_context-1 fits
+    assert admit(16, 16) == (ADMIT_REJECT, 0)     # no room for decode write
+    assert admit(16, 16, "truncate") == (ADMIT_TRUNCATE, 15)
+    assert admit(1000, 16, "truncate") == (ADMIT_TRUNCATE, 15)
+    assert admit(0, 16) == (ADMIT_OK, 0)
+    with pytest.raises(ValueError):
+        admit(99, 16, "resize")
+
+
+def test_assign_slots_fifo_lowest_first():
+    assert assign_slots([7, 3, 9], [2, 0]) == [(7, 0), (3, 2)]
+    assert assign_slots([], [0, 1]) == []
+    assert assign_slots([1, 2], []) == []
+
+
+def test_expire_arrival_order():
+    meta = [(0, 0.0, 5.0), (1, 1.0, None), (2, 2.0, 3.0)]
+    expired, remaining = expire(meta, 4.0)
+    assert expired == [2] and [r for r, _, _ in remaining] == [0, 1]
+    expired, remaining = expire(meta, 5.0)
+    assert expired == [0, 2] and [r for r, _, _ in remaining] == [1]
+
+
+# ------------------------------------------------------- unit: PagedKVCache
+
+class _FakeModel:
+    def init_cache(self, batch, context):
+        return {"k": np.zeros((2, batch, context, 1, 4))}
+
+
+def test_paged_cache_alloc_release_reuse():
+    c = PagedKVCache(_FakeModel(), 3, 8)
+    assert c.data["k"].shape == (2, 3, 8, 1, 4)
+    s0, s1 = c.alloc(10), c.alloc(11)
+    assert (s0, s1) == (0, 1) and c.n_free == 1
+    c.lengths[s0] = 5
+    c.release(s0)
+    assert c.lengths[s0] == 0 and c.free_slots == [0, 2]
+    assert c.alloc(12) == 0                       # lowest free slot reused
+    c.alloc(13)
+    with pytest.raises(RuntimeError):
+        c.alloc(14)                               # pool exhausted
+    c.release(1)
+    with pytest.raises(AssertionError):
+        c.release(1)                              # double release
+
+
+# ----------------------------------------------- properties of the oracle
+
+def _check_no_double_booking(log, n_slots):
+    active = {}
+    for t, action, rid, slot in log:
+        if action == "assign":
+            assert slot not in active, (t, rid, slot)
+            assert 0 <= slot < n_slots
+            active[slot] = rid
+        elif action == "release":
+            assert active.pop(slot) == rid
+
+
+def _check_fifo(log, arrivals):
+    """Assignment order must follow arrival order (FIFO, no skipping)."""
+    order = [rid for _, rid in sorted(arrivals)]
+    assigned = [rid for _, a, rid, _ in log if a == "assign"]
+    assert assigned == [r for r in order if r in set(assigned)]
+
+
+def _steady_finishes(arrivals, durations, n_slots):
+    """Fixed-point finish times: every assigned request runs for its
+    duration.  Converges because assignments only unlock monotonically."""
+    finishes = {}
+    for _ in range(len(arrivals) + 2):
+        log = simulate(arrivals, finishes, n_slots,
+                       horizon=10 * (len(arrivals) + 1) + 20)
+        new = {rid: t + durations[rid]
+               for t, a, rid, _ in log if a == "assign"}
+        if new == finishes:
+            return log, finishes
+        finishes = new
+    raise AssertionError("fixed point not reached")
+
+
+def _scheduler_case(rng):
+    n = int(rng.integers(1, 10))
+    n_slots = int(rng.integers(1, 4))
+    arrivals = [(int(rng.integers(0, 10)), rid) for rid in range(n)]
+    durations = {rid: int(rng.integers(1, 6)) for rid in range(n)}
+    return arrivals, durations, n_slots
+
+
+def _check_scheduler_props(arrivals, durations, n_slots):
+    log, finishes = _steady_finishes(arrivals, durations, n_slots)
+    _check_no_double_booking(log, n_slots)
+    _check_fifo(log, arrivals)
+    # no starvation: when every running request finishes, everyone is served
+    assigned = {rid for _, a, rid, _ in log if a == "assign"}
+    assert assigned == {rid for _, rid in arrivals}
+    released = {rid for _, a, rid, _ in log if a == "release"}
+    assert released == assigned
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_simulate_props_seeded(seed):
+    _check_scheduler_props(*_scheduler_case(np.random.default_rng(seed)))
+
+
+def _deadline_case(rng):
+    n = int(rng.integers(2, 8))
+    arrivals = [(int(rng.integers(0, 6)), rid) for rid in range(n)]
+    deadlines = {rid: int(rng.integers(1, 12)) for rid in range(n)
+                 if rng.random() < 0.7}
+    return arrivals, deadlines
+
+
+def _check_deadline_props(arrivals, deadlines):
+    # one slot, the first assignee never finishes: every queued request with
+    # a deadline must expire, at its deadline or later, never after assign
+    log = simulate(arrivals, {}, 1, deadlines=deadlines, horizon=40)
+    assigned = {rid for _, a, rid, _ in log if a == "assign"}
+    expired = {rid: t for t, a, rid, _ in log if a == "expire"}
+    assert len(assigned) == 1
+    assert not (assigned & set(expired))          # running never expires
+    for rid, t in expired.items():
+        assert t >= deadlines[rid]                # not before its deadline
+    for rid in set(deadlines) - assigned:
+        assert rid in expired                     # queued + deadline => out
+    # expiries at the same step follow arrival order
+    arrival_of = {rid: t for t, rid in arrivals}
+    by_step: dict = {}
+    for t, a, rid, _ in log:
+        if a == "expire":
+            by_step.setdefault(t, []).append(rid)
+    for rids in by_step.values():
+        keys = [(arrival_of[r], r) for r in rids]
+        assert keys == sorted(keys)
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_simulate_deadline_props_seeded(seed):
+    _check_deadline_props(*_deadline_case(np.random.default_rng(1000 + seed)))
+
+
+def test_simulate_never_assigns_expired():
+    # rid 0 occupies the slot; rid 1's deadline lapses at t=2; even though
+    # the slot frees at t=5 (usable the step after), rid 1 must NOT be
+    # assigned — rid 2 gets it
+    log = simulate([(0, 0), (1, 1), (1, 2)], {0: 5}, 1, deadlines={1: 2})
+    assert (6, "assign", 2, 0) in log
+    assert not any(a == "assign" and rid == 1 for _, a, rid, _ in log)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_simulate_props_hypothesis(seed):
+        _check_scheduler_props(*_scheduler_case(np.random.default_rng(seed)))
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_simulate_deadline_props_hypothesis(seed):
+        _check_deadline_props(*_deadline_case(np.random.default_rng(seed)))
+
+
+# ----------------------------------------------- engine vs oracle cross-check
+
+def test_engine_matches_oracle():
+    """Replay the live engine's admitted arrivals + observed finish steps
+    through the pure simulator: the slot decisions must coincide."""
+    import jax
+    from repro.nn import Model, get_config
+    from repro.runtime.serve import Request, ServeEngine
+
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              n_layers=2, vocab=64, remat=False)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=2, max_context=32, eos_id=-1,
+                      prefill_chunk=4)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 3 + 2 * i)
+                    .astype(np.int32), max_new_tokens=3 + i % 3)
+            for i in range(7)]
+    eng.run(reqs)
+
+    arrivals = [(t, rid) for t, a, rid, _ in eng.events if a == "admit"]
+    finishes = {rid: t for t, a, rid, _ in eng.events if a == "release"}
+    oracle = simulate(arrivals, finishes, eng.max_batch,
+                      horizon=eng.stats["steps"] + 1)
+    # same assignment sequence (order AND slot ids), same release set
+    eng_assigns = [(rid, s) for _, a, rid, s in eng.events if a == "assign"]
+    orc_assigns = [(rid, s) for _, a, rid, s in oracle if a == "assign"]
+    assert eng_assigns == orc_assigns
+    assert {(rid, s) for _, a, rid, s in eng.events if a == "release"} == \
+           {(rid, s) for _, a, rid, s in oracle if a == "release"}

@@ -101,6 +101,122 @@ def test_int4_pack_roundtrip():
                                   np.asarray(q))
 
 
+def test_serving_quant_hook(lm):
+    cfg, m, params, batch = lm
+    from repro.quant import serving_quant
+    qt, deq, nbytes = serving_quant(params, bits=8,
+                                    dtype=jnp.dtype(cfg.dtype))
+    assert nbytes == quant_bytes(qt)
+    # deq is jit-composable and matches plain dequant at the engine dtype
+    f = jax.jit(lambda t: deq(t)["final_norm"])
+    np.testing.assert_array_equal(
+        np.asarray(f(qt)), np.asarray(dequant(qt, dtype=cfg.dtype)
+                                      ["final_norm"]))
+
+
+def test_quantized_vs_float_serving_parity(lm):
+    """quantized=True must equal serving the dequantized tree: PoT dequant
+    is exact, so greedy token streams are identical (DESIGN.md 13)."""
+    cfg, m, params, batch = lm
+    cfg32 = dataclasses.replace(cfg, dtype="float32")
+    params32 = Model(cfg32).init(jax.random.PRNGKey(0))
+    pf = dequant(quantize_tree(params32, bits=8), dtype=jnp.float32)
+    prompts = [np.arange(5, dtype=np.int32) % cfg.vocab for _ in range(3)]
+
+    def serve(p, quant):
+        eng = ServeEngine(cfg32, p, max_batch=2, max_context=32, eos_id=-1,
+                          quantized=quant, prefill_chunk=4)
+        reqs = [Request(rid=i, prompt=pr, max_new_tokens=5)
+                for i, pr in enumerate(prompts)]
+        eng.run(reqs)
+        return [r.out_tokens for r in reqs]
+
+    assert serve(pf, False) == serve(params32, True)
+
+
+# ---- property: PoT quantization is bit-exact on representable weights ----
+# Representable = mant * 2^-exp with per-column integer mantissas whose
+# |max| lands in [64, 127]: the fixed point of 8-bit PoT quantization (the
+# chosen exponent re-chooses itself; round() is exact on integers).  Seeded
+# numpy cases always run; hypothesis widens the search when installed.
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _representable_case(rng):
+    """Random (mant int64 (K, C), exps int64 (C,)) representable weights."""
+    K, C = int(rng.integers(1, 9)), int(rng.integers(1, 5))
+    mant = rng.integers(-63, 64, (K, C))
+    exps = rng.integers(-3, 11, C)
+    for c in range(C):                       # plant the per-column max
+        row = int(rng.integers(0, K))
+        mant[row, c] = int(rng.integers(64, 128)) * int(rng.choice((-1, 1)))
+    return mant, exps
+
+
+def _check_pot_roundtrip(mant, exps):
+    from repro.kernels.ops import quantize_pot
+    w = (mant.astype(np.float64) * np.exp2(-exps.astype(np.float64))
+         ).astype(np.float32)
+    wq, e = quantize_pot(jnp.asarray(w), bits=8, axis=(0,))
+    np.testing.assert_array_equal(np.asarray(e), exps)
+    np.testing.assert_array_equal(np.asarray(wq, np.int64), mant)
+    deq = np.asarray(wq, np.float32) * np.exp2(-np.asarray(e, np.float32))
+    np.testing.assert_array_equal(deq.astype(np.float32), w)
+
+
+def _check_tree_roundtrip(mant, exps):
+    """quantize_tree -> dequant is the identity on representable weights
+    (and idempotent: re-quantizing the dequantized tree changes nothing)."""
+    w = (mant.astype(np.float64) * np.exp2(-exps.astype(np.float64))
+         ).astype(np.float32)
+    tree = {"layer": {"w": jnp.asarray(w)}}
+    qt = quantize_tree(tree, bits=8)
+    back = dequant(qt, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back["layer"]["w"]), w)
+    qt2 = quantize_tree(back, bits=8)
+    np.testing.assert_array_equal(np.asarray(qt2["layer"]["w"]["q"]),
+                                  np.asarray(qt["layer"]["w"]["q"]))
+    np.testing.assert_array_equal(np.asarray(qt2["layer"]["w"]["exp"]),
+                                  np.asarray(qt["layer"]["w"]["exp"]))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_pot_roundtrip_bit_exact(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(4):
+        _check_pot_roundtrip(*_representable_case(rng))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_pot_tree_roundtrip_bit_exact(seed):
+    rng = np.random.default_rng(100 + seed)
+    for _ in range(3):
+        _check_tree_roundtrip(*_representable_case(rng))
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _representable_strategy(draw):
+        mant, exps = _representable_case(
+            np.random.default_rng(draw(st.integers(0, 2**31))))
+        return mant, exps
+
+    @settings(max_examples=25, deadline=None)
+    @given(_representable_strategy())
+    def test_pot_roundtrip_bit_exact_hypothesis(case):
+        _check_pot_roundtrip(*case)
+
+    @settings(max_examples=10, deadline=None)
+    @given(_representable_strategy())
+    def test_pot_tree_roundtrip_bit_exact_hypothesis(case):
+        _check_tree_roundtrip(*case)
+
+
 def test_int4_tree_halves_bytes(lm):
     cfg, m, params, batch = lm
     t8 = quantize_tree(params, bits=8)

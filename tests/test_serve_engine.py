@@ -1,0 +1,357 @@
+"""Paged serving engine: parity vs the reference engine, chunked prefill,
+slot reuse, admission, deadlines, sampler determinism (DESIGN.md 13)."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.nn import Model, get_config
+from repro.runtime.serve import (ReferenceEngine, Request, ServeEngine,
+                                 summarize)
+
+
+@pytest.fixture(scope="module")
+def lm32():
+    """float32 tiny dense LM: parity across engines/code paths must be exact
+    (the chunked-prefill and decode attention paths differ only by softmax
+    association, which float32 keeps bit-stable at this scale)."""
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              n_layers=2, vocab=64, remat=False,
+                              dtype="float32")
+    m = Model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _reqs(prompts, max_new=6, **kw):
+    return [Request(rid=i, prompt=np.asarray(p, np.int32),
+                    max_new_tokens=max_new, **kw)
+            for i, p in enumerate(prompts)]
+
+
+def _serve(cfg, params, prompts, engine="paged", max_new=6, **kw):
+    cls = ServeEngine if engine == "paged" else ReferenceEngine
+    eng = cls(cfg, params, eos_id=-1, **kw)
+    reqs = _reqs(prompts, max_new=max_new)
+    eng.run(reqs)
+    return eng, reqs
+
+
+# --------------------------------------------------- old-vs-new engine parity
+
+def test_parity_vs_reference_equal_lengths(lm32):
+    """Equal-length prompts: the reference engine pads nothing, so greedy
+    outputs must match the paged engine token for token."""
+    cfg, m, params = lm32
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 7) for _ in range(5)]
+    _, ref = _serve(cfg, params, prompts, engine="reference",
+                    max_batch=2, max_context=32)
+    _, new = _serve(cfg, params, prompts, engine="paged",
+                    max_batch=2, max_context=32, prefill_chunk=3)
+    assert [r.out_tokens for r in new] == [r.out_tokens for r in ref]
+
+
+def test_parity_vs_reference_mixed_lengths_b1(lm32):
+    """Mixed prompt lengths at max_batch=1: no left-padding in either
+    engine, so parity must hold for ragged prompts too."""
+    cfg, m, params = lm32
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, n) for n in (3, 11, 6)]
+    _, ref = _serve(cfg, params, prompts, engine="reference",
+                    max_batch=1, max_context=32)
+    _, new = _serve(cfg, params, prompts, engine="paged",
+                    max_batch=1, max_context=32, prefill_chunk=4)
+    assert [r.out_tokens for r in new] == [r.out_tokens for r in ref]
+
+
+def test_parity_quantized(lm32):
+    cfg, m, params = lm32
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, 5) for _ in range(3)]
+    _, ref = _serve(cfg, params, prompts, engine="reference",
+                    max_batch=2, max_context=32, quantized=True)
+    _, new = _serve(cfg, params, prompts, engine="paged",
+                    max_batch=2, max_context=32, quantized=True,
+                    prefill_chunk=2)
+    assert [r.out_tokens for r in new] == [r.out_tokens for r in ref]
+
+
+# ------------------------------------------------------------ chunked prefill
+
+def test_prefill_chunk_size_invariance(lm32):
+    """The chunk size is a scheduling knob, not a numerics knob: any chunking
+    of the prompt must produce identical greedy tokens (each chunk row
+    attends to exactly cache[0..offset+i]; padded tail positions are masked
+    and overwritten in place before the slot length crosses them)."""
+    cfg, m, params = lm32
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, n) for n in (13, 5, 9)]
+    outs = []
+    for chunk in (2, 5, 64):
+        _, reqs = _serve(cfg, params, prompts, max_batch=2, max_context=32,
+                         prefill_chunk=chunk)
+        outs.append([r.out_tokens for r in reqs])
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_long_prompt_does_not_stall_decode(lm32):
+    """Chunked prefill interleaves with decode: while a long prompt streams
+    in, an already-decoding slot keeps emitting a token per engine step."""
+    cfg, m, params = lm32
+    eng = ServeEngine(cfg, params, max_batch=2, max_context=64, eos_id=-1,
+                      prefill_chunk=4)
+    rng = np.random.default_rng(4)
+    short = Request(rid=0, prompt=rng.integers(0, cfg.vocab, 4)
+                    .astype(np.int32), max_new_tokens=16)
+    long = Request(rid=1, prompt=rng.integers(0, cfg.vocab, 40)
+                   .astype(np.int32), max_new_tokens=2)
+    eng.submit(short)
+    # one step = prefill completion (first token) + one decode token
+    eng.step()
+    assert len(short.out_tokens) == 2
+    eng.submit(long)                # 40-token prompt = 10 more chunks
+    n0 = len(short.out_tokens)
+    for _ in range(5):              # long is mid-prefill the whole time
+        eng.step()
+    assert len(short.out_tokens) == n0 + 5     # one token per step, no stall
+    while eng.queue or eng.slots:
+        eng.step()
+    assert short.status == long.status == "done"
+    assert len(long.out_tokens) == 2
+
+
+# ------------------------------------------------- slots, admission, deadline
+
+def test_slot_reuse_and_refill_mid_stream(lm32):
+    """More requests than slots: slots are released and re-assigned while
+    other slots keep decoding — no whole-batch refresh barrier."""
+    cfg, m, params = lm32
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, 4 + i) for i in range(6)]
+    eng, reqs = _serve(cfg, params, prompts, max_batch=2, max_context=32,
+                       max_new=4, prefill_chunk=8)
+    assert all(r.status == "done" for r in reqs)
+    assigns = [e for e in eng.events if e[1] == "assign"]
+    releases = [e for e in eng.events if e[1] == "release"]
+    assert len(assigns) == 6 and len(releases) == 6
+    # at least one slot serves several requests...
+    slots_used = [s for _, _, _, s in assigns]
+    assert max(slots_used.count(s) for s in set(slots_used)) >= 2
+    # ...and re-assignment happens while the other slot is mid-request
+    # (some assign strictly between another slot's assign and release)
+    for step, _, rid, slot in assigns[2:]:
+        other = [(e[0], r[0]) for e, r in zip(assigns, releases)
+                 if e[3] != slot]
+        if any(a < step <= r for a, r in other):
+            break
+    else:
+        pytest.fail("no mid-stream refill observed")
+
+
+def test_admission_reject_overflow_regression(lm32):
+    """Seed-engine bug: a prompt longer than max_context overflowed the KV
+    ring silently.  Both engines must now reject it at admission."""
+    cfg, m, params = lm32
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab, 40),      # > max_context=16
+               rng.integers(0, cfg.vocab, 5)]
+    for engine in ("paged", "reference"):
+        eng, reqs = _serve(cfg, params, prompts, engine=engine,
+                           max_batch=2, max_context=16, admission="reject")
+        assert reqs[0].status == "rejected" and reqs[0].out_tokens == []
+        assert reqs[1].status == "done" and len(reqs[1].out_tokens) == 6
+
+
+def test_admission_truncate_keeps_tail(lm32):
+    cfg, m, params = lm32
+    rng = np.random.default_rng(7)
+    long = rng.integers(0, cfg.vocab, 40).astype(np.int32)
+    for engine in ("paged", "reference"):
+        eng, reqs = _serve(cfg, params, [long.copy()], engine=engine,
+                           max_batch=1, max_context=16, max_new=3,
+                           admission="truncate")
+        r = reqs[0]
+        assert r.truncated and r.status == "done"
+        np.testing.assert_array_equal(r.prompt, long[-15:])  # tail kept
+        # cap: prompt(15) + first token + 1 decode write fills the slot
+        assert len(r.out_tokens) == 2
+
+
+def test_truncated_equals_pretruncated(lm32):
+    """Serving a truncated prompt == serving its tail directly."""
+    cfg, m, params = lm32
+    rng = np.random.default_rng(8)
+    long = rng.integers(0, cfg.vocab, 30).astype(np.int32)
+    _, a = _serve(cfg, params, [long.copy()], max_batch=1, max_context=16,
+                  max_new=2, admission="truncate")
+    _, b = _serve(cfg, params, [long[-15:].copy()], max_batch=1,
+                  max_context=16, max_new=2)
+    assert a[0].out_tokens == b[0].out_tokens
+
+
+def test_deadline_expiry_fake_clock(lm32):
+    """Queued requests past their deadline expire before ever taking a slot
+    (injected clock makes the timeout deterministic)."""
+    cfg, m, params = lm32
+    t = [0.0]
+    eng = ServeEngine(cfg, params, max_batch=1, max_context=32, eos_id=-1,
+                      clock=lambda: t[0])
+    rng = np.random.default_rng(9)
+    reqs = _reqs([rng.integers(0, cfg.vocab, 4) for _ in range(3)],
+                 max_new=3)
+    reqs[1].deadline_s = 5.0      # expires while req 0 holds the only slot
+    reqs[2].deadline_s = 1e9
+    for r in reqs:
+        eng.submit(r)
+    t[0] = 10.0
+    while eng.queue or eng.slots:
+        eng.step()
+    assert [r.status for r in reqs] == ["done", "expired", "done"]
+    assert reqs[1].out_tokens == []
+    assert any(e[1] == "expire" and e[2] == 1 for e in eng.events)
+    assert reqs[1].stats["queue_s"] == 10.0
+
+
+def test_per_request_latency_stats(lm32):
+    cfg, m, params = lm32
+    rng = np.random.default_rng(10)
+    eng, reqs = _serve(cfg, params,
+                       [rng.integers(0, cfg.vocab, 5) for _ in range(3)],
+                       max_batch=2, max_context=32, max_new=4)
+    for r in reqs:
+        for k in ("queue_s", "prefill_s", "first_token_s", "total_s",
+                  "decode_tokens", "decode_s", "max_new_eff"):
+            assert k in r.stats, k
+        assert r.stats["first_token_s"] <= r.stats["total_s"]
+        assert r.stats["decode_tokens"] == len(r.out_tokens) - 1
+    s = summarize(reqs)
+    assert s["done"] == 3 and s["decode_tok_s"] > 0
+    assert s["p50_total_s"] <= s["p99_total_s"]
+
+
+# ------------------------------------------------------- sampler determinism
+
+def test_sampler_deterministic_across_runs_and_batches(lm32):
+    """temperature>0 streams depend only on (seed, rid, token index):
+    identical across reruns AND across batch compositions."""
+    cfg, m, params = lm32
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, 6) for _ in range(4)]
+
+    def toks(idxs, **kw):
+        eng = ServeEngine(cfg, params, eos_id=-1, temperature=0.8, seed=7,
+                          max_context=32, **kw)
+        reqs = [Request(rid=i, prompt=np.asarray(prompts[i], np.int32),
+                        max_new_tokens=5) for i in idxs]
+        eng.run(reqs)
+        return {r.rid: r.out_tokens for r in reqs}
+
+    full = toks(range(4), max_batch=4)
+    again = toks(range(4), max_batch=4)
+    assert full == again                                   # rerun-stable
+    solo = {}
+    for i in range(4):                                     # batch-of-one
+        solo.update(toks([i], max_batch=1))
+    assert solo == full                                    # composition-free
+    pairs = toks([2, 0], max_batch=2)                      # different mix
+    assert pairs[0] == full[0] and pairs[2] == full[2]
+    assert toks(range(4), max_batch=4, prefill_chunk=2) == full
+
+
+def test_sampler_seed_changes_stream(lm32):
+    cfg, m, params = lm32
+    rng = np.random.default_rng(12)
+    p = [rng.integers(0, cfg.vocab, 6)]
+
+    def toks(seed):
+        eng = ServeEngine(cfg, params, eos_id=-1, temperature=0.8,
+                          seed=seed, max_batch=1, max_context=32)
+        reqs = _reqs(p, max_new=8)
+        eng.run(reqs)
+        return reqs[0].out_tokens
+
+    assert toks(0) != toks(1)
+
+
+# ------------------------------------------------------------ guard + events
+
+def test_non_dense_family_raises(lm32):
+    cfg = get_config("rwkv6-3b").reduced()
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError):
+        ServeEngine(cfg, params)
+    # the reference engine still serves recurrent-state families
+    eng = ReferenceEngine(cfg, params, max_batch=1, max_context=16,
+                          eos_id=-1)
+    reqs = _reqs([np.arange(4) % cfg.vocab], max_new=2)
+    eng.run(reqs)
+    assert len(reqs[0].out_tokens) == 2
+
+
+def test_eos_stops_decode(lm32):
+    """Greedy decode stops the request the moment EOS is emitted (the EOS
+    token itself is kept — reference-engine semantics)."""
+    cfg, m, params = lm32
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, 6) for _ in range(3)]
+    _, free = _serve(cfg, params, prompts, max_batch=2, max_context=32,
+                     max_new=6)
+    eos = free[0].out_tokens[2]     # force an EOS mid-stream for req 0
+    eng = ServeEngine(cfg, params, max_batch=2, max_context=32, eos_id=eos,
+                      prefill_chunk=64)
+    reqs = _reqs(prompts, max_new=6)
+    eng.run(reqs)
+    assert reqs[0].out_tokens == free[0].out_tokens[:3]
+    for r, f in zip(reqs, free):
+        cut = (f.out_tokens[1:].index(eos) + 2 if eos in f.out_tokens[1:]
+               else len(f.out_tokens))
+        assert r.out_tokens == f.out_tokens[:cut]
+
+
+# ------------------------------------------------------- shard_map decode DP
+
+_DP_SCRIPT = r"""
+import dataclasses
+import jax
+import numpy as np
+from repro.nn import Model, get_config
+from repro.runtime.serve import Request, ServeEngine
+assert jax.device_count() == 4
+cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(), n_layers=2,
+                          vocab=64, remat=False, dtype="float32")
+m = Model(cfg)
+params = m.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab, 5 + i) for i in range(5)]
+outs = []
+for dp in (False, True):
+    eng = ServeEngine(cfg, params, max_batch=4, max_context=32, eos_id=-1,
+                      prefill_chunk=4, data_parallel=dp)
+    reqs = [Request(rid=i, prompt=np.asarray(p, np.int32), max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    eng.run(reqs)
+    outs.append([r.out_tokens for r in reqs])
+assert outs[0] == outs[1], (outs[0], outs[1])
+try:
+    ServeEngine(cfg, params, max_batch=3, data_parallel=True)
+except ValueError:
+    print("DIV-GUARD-OK")
+print("DP-OK")
+"""
+
+
+def test_data_parallel_decode_parity():
+    """shard_map decode over 4 forced host devices == single-device greedy."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", _DP_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DP-OK" in out.stdout and "DIV-GUARD-OK" in out.stdout
