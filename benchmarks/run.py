@@ -524,6 +524,10 @@ def bench_serving():
             # steady-state serving, not compilation
             eng.run([Request(rid=-1, prompt=np.arange(4, dtype=np.int32),
                              max_new_tokens=2)])
+            # drop the warmup from the aggregate counters so decode_tok_s
+            # divides by replay-only decode wall time
+            eng.stats.update(prefill_tokens=0, decode_tokens=0,
+                             prefill_s=0.0, decode_s=0.0)
             arrive = np.cumsum(rng.exponential(1.0 / rate, n_req))
             reqs = [Request(rid=i,
                             prompt=rng.integers(
@@ -541,7 +545,7 @@ def bench_serving():
                     continue
                 eng.step()
             wall = time.time() - t0
-            s = summarize(reqs)
+            s = summarize(reqs, eng)
             tag = "int8pot" if quant else "bf16"
             rows.append((f"serving/{tag}/rate{rate:g}", wall * 1e6,
                          f"decode_tok_s={s['decode_tok_s']:.1f};"

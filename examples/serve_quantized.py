@@ -66,7 +66,7 @@ def main():
                 for i, p in enumerate(prompts)]
         t0 = time.time()
         eng.run(reqs)
-        s = summarize(reqs)
+        s = summarize(reqs, eng)
         print(f"   {tag:8s} served {s['done']}/{s['n']} in "
               f"{time.time()-t0:.2f}s; truncated={s['truncated']}; "
               f"first-token p50={s['p50_first_token_s']*1e3:.0f}ms; "

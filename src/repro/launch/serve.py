@@ -81,7 +81,7 @@ def main(argv=None):
           f"({eng.stats['decode_tokens']/max(eng.stats['decode_s'],1e-9):.1f}"
           f" tok/s)")
     if isinstance(eng, ServeEngine):
-        s = summarize(reqs)
+        s = summarize(reqs, eng)
         print(f"latency: first-token p50={s['p50_first_token_s']*1e3:.1f}ms "
               f"p99={s['p99_first_token_s']*1e3:.1f}ms; total "
               f"p50={s['p50_total_s']*1e3:.1f}ms "

@@ -544,6 +544,12 @@ class Model:
         masked by the chunk attention and later overwritten in place by the
         next chunk or decode write before the slot length ever reaches them.
 
+        Caller contract: ``offset + c`` must not exceed the cache context —
+        ``jax.lax.dynamic_update_slice`` CLAMPS an out-of-range start index,
+        which would shift the whole chunk (pad garbage included) backwards
+        over earlier valid positions.  The serving engine shrinks the final
+        chunk host-side to honor this.
+
         Supports the standard-KV families (dense / moe).  Exactness: for
         dense models the chunk outputs are bitwise independent of the chunk
         size (attention row i sees exactly cache[0..offset+i], all other ops

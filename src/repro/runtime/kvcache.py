@@ -96,8 +96,12 @@ def simulate(arrivals, finishes, n_slots: int, *, deadlines=None,
     deadlines = deadlines or {}
     arrivals = sorted(arrivals)
     if horizon is None:
-        horizon = max([t for t, _ in arrivals] +
-                      list(finishes.values()) + [0]) + 1
+        # deadlines count toward the horizon too: a queued request whose
+        # deadline lapses after the last arrival/finish must still get its
+        # "expire" event logged
+        horizon = int(max([t for t, _ in arrivals] +
+                          list(finishes.values()) +
+                          list(deadlines.values()) + [0])) + 1
     queue: list = []          # [(rid, arrival, deadline)]
     free = list(range(n_slots))
     slot_of: dict = {}

@@ -59,13 +59,21 @@ class Request:
     stats: dict = field(default_factory=dict)
 
 
-def summarize(requests) -> dict:
+def summarize(requests, engine=None) -> dict:
     """p50/p99 latency + throughput over a served request list.
 
     Reads the per-request ``stats`` the paged engine fills in: total_s
     (arrival -> done), first_token_s (arrival -> first sampled token), and
     decode_tokens/decode_s.  Rejected/expired requests count in their own
     buckets and are excluded from the percentiles.
+
+    ``engine``: the engine that served the requests.  Its aggregate
+    ``stats["decode_s"]`` is the true batched-decode wall time, which is the
+    only honest denominator for ``decode_tok_s`` — each request's own
+    ``decode_s`` counts the FULL wall time of every shared dispatch it rode
+    in, so no combination of the per-request values recovers the aggregate.
+    Without an engine ``decode_tok_s`` is reported as 0.0; read the
+    per-request ``stats["decode_tok_s"]`` instead.
     """
     done = [r for r in requests if r.status == "done"]
 
@@ -76,7 +84,7 @@ def summarize(requests) -> dict:
         return xs[min(len(xs) - 1, int(round(p / 100 * (len(xs) - 1))))]
 
     dec_tok = sum(r.stats.get("decode_tokens", 0) for r in done)
-    dec_s = max((r.stats.get("decode_s", 0.0) for r in done), default=0.0)
+    dec_s = engine.stats.get("decode_s", 0.0) if engine is not None else 0.0
     return {
         "n": len(requests), "done": len(done),
         "rejected": sum(r.status == "rejected" for r in requests),
@@ -236,12 +244,17 @@ class ServeEngine:
     def step(self, now=None) -> list:
         """One scheduling iteration: expire -> refill slots -> one prefill
         chunk -> one decode step over every decoding slot.  Returns requests
-        finished this step."""
-        now = self._now(now)
+        finished this step.  ``now`` injects the caller's timebase: every
+        timestamp this step records (expiry, queue_s, first_token_s,
+        total_s) then comes from it, never from ``self.clock``."""
+        t = self._now(now)
         self._step_idx += 1
         self.stats["steps"] += 1
-        self._expire(now)
-        self._assign(now)
+        self._expire(t)
+        self._assign(t)
+        # sub-steps get the RAW argument: with now=None they re-read the
+        # clock after their dispatch (t_first/t_done include dispatch wall
+        # time); with an injected now they stay in the caller's timebase
         self._prefill_step(now)
         return self._decode_step(now)
 
@@ -289,7 +302,12 @@ class ServeEngine:
         _, slot = min(pending)
         st = self.slots[slot]
         r = st.req
-        chunk = self.prefill_chunk
+        # shrink the final chunk so its fixed window never crosses the end
+        # of the slot: with offset + chunk > max_context the
+        # dynamic_update_slice start index would clamp and shift the write
+        # over earlier prompt KV.  Offsets are multiples of prefill_chunk,
+        # so at most one extra shape (max_context % prefill_chunk) compiles.
+        chunk = min(self.prefill_chunk, self.max_context - st.n_prefilled)
         n = min(chunk, len(r.prompt) - st.n_prefilled)
         toks = np.zeros((1, chunk), np.int32)
         toks[0, :n] = r.prompt[st.n_prefilled:st.n_prefilled + n]
@@ -313,7 +331,7 @@ class ServeEngine:
         # parity pins that behavior)
         tok = int(self._sample(logits, np.array([r.rid]), np.array([0]))[0])
         r.out_tokens.append(tok)
-        t_first = self._now(None)
+        t_first = self._now(now)
         r.stats["first_token_s"] = t_first - r.arrival_s
         st.phase = "decode"
         if len(r.out_tokens) >= r.stats["max_new_eff"]:
@@ -349,7 +367,7 @@ class ServeEngine:
         self.stats["decode_steps"] += 1
         self.stats["decode_tokens"] += len(active)
         nxt = self._sample(lg, rids, steps)
-        t_done = self._now(None)
+        t_done = self._now(now)
         finished = []
         for slot in active:
             st = self.slots[slot]

@@ -163,6 +163,15 @@ def test_simulate_deadline_props_seeded(seed):
     _check_deadline_props(*_deadline_case(np.random.default_rng(1000 + seed)))
 
 
+def test_simulate_default_horizon_covers_deadlines():
+    """A queued request whose deadline lapses after the last arrival/finish
+    must still get its expire event under the DEFAULT horizon (regression:
+    the horizon once ignored ``deadlines``, silently dropping late
+    expirations)."""
+    log = simulate([(0, 0), (0, 1)], {}, 1, deadlines={1: 30})
+    assert (30, "expire", 1, None) in log
+
+
 def test_simulate_never_assigns_expired():
     # rid 0 occupies the slot; rid 1's deadline lapses at t=2; even though
     # the slot frees at t=5 (usable the step after), rid 1 must NOT be

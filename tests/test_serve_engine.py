@@ -98,6 +98,24 @@ def test_prefill_chunk_size_invariance(lm32):
     assert outs[0] == outs[1] == outs[2]
 
 
+def test_prefill_chunk_crossing_context_boundary(lm32):
+    """Regression: when the fixed chunk window crossed max_context
+    (offset + chunk > C), dynamic_update_slice clamped the start index and
+    shifted the chunk — pad garbage included — over earlier prompt KV.  A
+    max-length prompt with non-dividing chunk sizes must match the
+    single-chunk result token for token."""
+    cfg, m, params = lm32
+    # seed chosen so the pre-fix engine demonstrably diverges here
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, 31)   # max admissible for C=32
+    outs = []
+    for chunk in (5, 7, 64):                  # 5, 7 do not divide 32
+        _, reqs = _serve(cfg, params, [prompt], max_batch=1, max_context=32,
+                         max_new=4, prefill_chunk=chunk)
+        outs.append(reqs[0].out_tokens)
+    assert outs[0] == outs[1] == outs[2]
+
+
 def test_long_prompt_does_not_stall_decode(lm32):
     """Chunked prefill interleaves with decode: while a long prompt streams
     in, an already-decoding slot keeps emitting a token per engine step."""
@@ -228,9 +246,35 @@ def test_per_request_latency_stats(lm32):
             assert k in r.stats, k
         assert r.stats["first_token_s"] <= r.stats["total_s"]
         assert r.stats["decode_tokens"] == len(r.out_tokens) - 1
-    s = summarize(reqs)
+    s = summarize(reqs, eng)
     assert s["done"] == 3 and s["decode_tok_s"] > 0
     assert s["p50_total_s"] <= s["p99_total_s"]
+    # aggregate tok/s divides by the ENGINE's batched-decode wall time (the
+    # per-request decode_s each count full shared dispatches and cannot be
+    # recombined); without the engine the aggregate is not reported
+    assert s["decode_tok_s"] == pytest.approx(
+        s["decode_tokens"] / eng.stats["decode_s"])
+    assert summarize(reqs)["decode_tok_s"] == 0.0
+
+
+def test_injected_now_timebase(lm32):
+    """submit(now=...)/step(now=...) keep every latency stat in the caller's
+    timebase — no mixing of simulated arrival times with the real clock."""
+    cfg, m, params = lm32
+    eng = ServeEngine(cfg, params, max_batch=1, max_context=32, eos_id=-1,
+                      prefill_chunk=64)
+    rng = np.random.default_rng(20)
+    r = Request(rid=0, prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                max_new_tokens=3)
+    eng.submit(r, now=100.0)
+    t = 100.0
+    while eng.queue or eng.slots:
+        t += 1.0
+        eng.step(now=t)
+    # step 1: prompt ingested + first token + one decode token; step 2: last
+    assert r.stats["queue_s"] == 1.0
+    assert r.stats["first_token_s"] == 1.0
+    assert r.stats["total_s"] == t - 100.0 == 2.0
 
 
 # ------------------------------------------------------- sampler determinism
