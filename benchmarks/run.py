@@ -32,6 +32,14 @@ import time
 SMOKE = False
 
 
+def _config_hash(cfg: dict) -> str:
+    """Short stable hash of a benchmark lane's engine config, so artifact
+    trajectories (BENCH_*.json across PRs) only compare like with like."""
+    import hashlib
+    blob = json.dumps(cfg, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()[:12]
+
+
 def bench_kernels():
     import jax.numpy as jnp
     import numpy as np
@@ -556,12 +564,146 @@ def bench_serving():
                          f"done={s['done']}"))
             lanes.append({"quant": tag, "rate_rps": rate, "n_requests": n_req,
                           "wall_s": wall, **s})
+    # the engine/traffic config the lanes ran under, hashed so cross-PR
+    # trajectory tooling can refuse to compare unlike runs
+    econf = {"arch": "qwen2-0.5b (reduced, 2L)", "n_layers": 2,
+             "vocab": cfg.vocab, "max_batch": 4, "max_context": 64,
+             "prefill_chunk": 16, "admission": "truncate", "eos_id": -1,
+             "engine_seed": 0, "arrival_seed": 0, "rates": list(rates),
+             "n_requests": n_req, "max_new_tokens": max_new, "smoke": SMOKE}
     with open("BENCH_serve.json", "w") as f:
         json.dump({"smoke": SMOKE, "arch": "qwen2-0.5b (reduced, 2L)",
                    "max_batch": 4, "max_context": 64, "prefill_chunk": 16,
+                   "seed": 0, "config": econf,
+                   "config_hash": _config_hash(econf),
                    "lanes": lanes}, f, indent=2)
     rows.append(("serving/report", 0.0,
                  f"wrote=BENCH_serve.json;lanes={len(lanes)}"))
+    return rows
+
+
+def bench_mixedbw():
+    """Mixed-bitwidth lane (DESIGN.md 14): the greedy per-layer rung
+    assigners, serial per-candidate reference vs stacked batched scoring —
+    identical rung decisions asserted on pendigits AND a reduced LM config —
+    plus the priced ``ServingCostSheet`` statement: mixed weight bytes <=
+    the global ladder's at equal accuracy budget, strictly below on at
+    least one config.  Writes ``BENCH_mixedbw.json`` (config hash + seed
+    in the artifact, like ``BENCH_serve.json``)."""
+    import dataclasses
+    import numpy as np
+    from repro.core import quantize_inputs
+    from repro.core.quantize import quantize_mlp
+    from repro.data import pendigits
+    from repro.quant import (min_bitwidth_search, mixed_bitwidth_search,
+                             mixed_minq_search, serving_ledger)
+    from repro.quant.mixed import intmlp_serving_sheet
+    from repro.train.zaal import TrainConfig, train
+
+    rows, lanes = [], []
+    strict_win = False
+
+    # -- pendigits: per-layer min-q vs the uniform IV-A rung ---------------
+    ds = pendigits.load()
+    (xtr, ytr), (xval, yval) = ds.validation_split()
+    xvi = quantize_inputs(pendigits.to_unit(xval))
+    acts = ("htanh", "hsig")
+    structures = [(16, 10, 10)] if SMOKE else [(16, 10, 10), (16, 16, 10)]
+    for st in structures:
+        res = train(TrainConfig(structure=st, epochs=5 if SMOKE else 25,
+                                seed=3),
+                    pendigits.to_unit(xtr), ytr,
+                    pendigits.to_unit(xval), yval)
+        t0 = time.time()
+        rs = mixed_minq_search(res.weights, res.biases, acts, xvi, yval,
+                               engine="serial")
+        t_serial = time.time() - t0
+        t0 = time.time()
+        rb = mixed_minq_search(res.weights, res.biases, acts, xvi, yval,
+                               engine="batched")
+        t_batched = time.time() - t0
+        assert (rs.qs, rs.ha, rs.history) == (rb.qs, rb.ha, rb.history), \
+            "mixed min-q decision mismatch!"
+        uniform = intmlp_serving_sheet(
+            quantize_mlp(res.weights, res.biases, acts, rb.q_star))
+        wb_mixed, wb_uni = rb.sheet.weight_bytes(), uniform.weight_bytes()
+        assert wb_mixed <= wb_uni, "mixed ledger costlier than uniform!"
+        strict_win |= wb_mixed < wb_uni
+        name = "-".join(map(str, st))
+        rows.append((f"mixedbw/pendigits/{name}", t_batched * 1e6,
+                     f"serial_s={t_serial:.4f};batched_s={t_batched:.4f};"
+                     f"speedup={t_serial / t_batched:.2f}x;"
+                     f"identical_decisions=yes;q_star={rb.q_star};"
+                     f"qs={'/'.join(map(str, rb.qs))};ha={rb.ha:.2f};"
+                     f"wbytes={wb_mixed:.0f};uniform_wbytes={wb_uni:.0f}"))
+        lanes.append({"lane": f"pendigits/{name}", "q_star": rb.q_star,
+                      "qs": rb.qs, "ha": rb.ha, "base_ha": rb.base_ha,
+                      "weight_bytes": wb_mixed, "uniform_bytes": wb_uni,
+                      "serial_s": t_serial, "batched_s": t_batched,
+                      "sheet": rb.sheet.to_dict()})
+
+    # -- reduced LM: per-matmul bits vs the global bit ladder --------------
+    import jax
+    from repro.nn import Model, get_config
+    vocab = 64 if SMOKE else 256
+    lm_cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                                 n_layers=2, vocab=vocab, remat=False)
+    m = Model(lm_cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                              lm_cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+
+    def ev_fn(p):
+        return m.loss(p, batch)[0]
+
+    budget = 0.05
+    t0 = time.time()
+    ms = mixed_bitwidth_search(params, ev_fn, budget=budget,
+                               engine="serial")
+    t_serial = time.time() - t0
+    t0 = time.time()
+    mb = mixed_bitwidth_search(params, ev_fn, budget=budget,
+                               engine="batched")
+    t_batched = time.time() - t0
+    assert (ms.bits, ms.start_bits, ms.history) == \
+        (mb.bits, mb.start_bits, mb.history), "mixed LM decision mismatch!"
+    _, gbits, _ = min_bitwidth_search(params, ev_fn, budget=budget)
+    gsheet = serving_ledger(params, bits=gbits)
+    wb_mixed, wb_glob = mb.sheet.weight_bytes(), gsheet.weight_bytes()
+    assert wb_mixed <= wb_glob, "mixed LM ledger costlier than global!"
+    strict_win |= wb_mixed < wb_glob
+    rows.append((f"mixedbw/qwen2-0.5b-r/v{vocab}", t_batched * 1e6,
+                 f"serial_s={t_serial:.3f};batched_s={t_batched:.3f};"
+                 f"speedup={t_serial / t_batched:.2f}x;"
+                 f"identical_decisions=yes;start_bits={mb.start_bits};"
+                 f"global_bits={gbits};wbytes={wb_mixed:.0f};"
+                 f"global_wbytes={wb_glob:.0f};"
+                 f"demotions={sum(1 for _r, _c, _p, ok in mb.history if ok)}"))
+    lanes.append({"lane": f"qwen2-0.5b-r/v{vocab}", "budget": budget,
+                  "start_bits": mb.start_bits, "global_bits": gbits,
+                  "bits": mb.bits, "base_loss": mb.base, "loss": mb.loss,
+                  "weight_bytes": wb_mixed, "global_bytes": wb_glob,
+                  "serial_s": t_serial, "batched_s": t_batched,
+                  "sheet": mb.sheet.to_dict()})
+
+    # the paper's claim at ledger level: per-layer rungs strictly beat the
+    # uniform ladder somewhere in this config set
+    assert strict_win, "no config priced strictly below the global ladder"
+
+    conf = {"structures": [list(s) for s in structures],
+            "epochs": 5 if SMOKE else 25, "train_seed": 3,
+            "lm_arch": "qwen2-0.5b (reduced, 2L)", "vocab": vocab,
+            "lm_budget": budget, "bit_ladder": [8, 6, 5, 4],
+            "init_seed": 0, "toks_seed": 1, "smoke": SMOKE}
+    with open("BENCH_mixedbw.json", "w") as f:
+        json.dump({"smoke": SMOKE, "seed": 0, "config": conf,
+                   "config_hash": _config_hash(conf),
+                   "strict_win": bool(strict_win), "lanes": lanes},
+                  f, indent=2)
+    rows.append(("mixedbw/report", 0.0,
+                 f"wrote=BENCH_mixedbw.json;lanes={len(lanes)};"
+                 f"strict_win={strict_win}"))
     return rows
 
 
@@ -604,6 +746,7 @@ SECTIONS = {
     "kernels": bench_kernels,
     "roofline": bench_roofline,
     "serving": bench_serving,
+    "mixedbw": bench_mixedbw,
     "compression": bench_compression,
     "ptq_decode": bench_ptq_decode,
 }

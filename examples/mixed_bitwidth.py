@@ -1,0 +1,97 @@
+"""Mixed-bitwidth serving: greedy per-layer rungs + the serving cost ledger.
+
+The paper's minimum-bitwidth search (IV-A) picks ONE rung for the whole
+network; this walkthrough runs the per-LAYER version (DESIGN.md 14): start
+every matmul at the global rung, demote the cheapest-loss layer one rung at
+a time while the quality budget holds, price the result as a roofline
+`ServingCostSheet`, and serve the `{path: bits}` assignment directly on the
+paged engine — every qleaf carries its own scheme, so mixed trees need no
+extra serving code.  The pendigits pipeline gets the same treatment via
+shift-embedding at the global q*.
+
+Run:  PYTHONPATH=src python examples/mixed_bitwidth.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.data.tokens import TokenPipeline
+from repro.nn import Model, get_config
+from repro.quant import (min_bitwidth_search, mixed_bitwidth_search,
+                         mixed_minq_search, serving_ledger)
+from repro.runtime.serve import Request, ServeEngine
+
+
+def lm_demo():
+    cfg = dataclasses.replace(
+        get_config("qwen2-0.5b"),
+        n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, d_ff=1024,
+        vocab=2048, remat=False)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=64, global_batch=4)
+    batch = jax.tree.map(jax.numpy.asarray, pipe.batch(0))
+
+    def ev(p):
+        return m.loss(p, batch)[0]
+
+    # a tight budget pins the GLOBAL ladder at a high rung, while the
+    # per-layer greedy still finds layers it can demote inside the same
+    # budget — that gap is the whole point of the mixed search
+    budget = 1e-4
+    print("== per-layer mixed-bitwidth search (DESIGN.md 14) ==")
+    res = mixed_bitwidth_search(params, ev, budget=budget)
+    print(f"   base loss={res.base:.4f}  mixed loss={res.loss:.4f}  "
+          f"start rung={res.start_bits}")
+    for path, b in sorted(res.bits.items()):
+        print(f"   {path:24s} -> {b} bits")
+
+    print("== serving cost ledger (roofline) ==")
+    sheet = res.sheet
+    _, gbits, _ = min_bitwidth_search(params, ev, budget=budget)
+    gsheet = serving_ledger(params, bits=gbits)
+    print(f"   mixed : {sheet.weight_bytes()/1e6:7.2f} MB weights, "
+          f"AI={sheet.arithmetic_intensity():.2f} ops/byte")
+    print(f"   global: {gsheet.weight_bytes()/1e6:7.2f} MB weights "
+          f"(uniform {gbits}-bit, same budget)")
+    sheet.save("examples/out/mixed_sheet.json")
+    print("   sheet -> examples/out/mixed_sheet.json")
+
+    print("== serve the searched assignment ==")
+    eng = ServeEngine(cfg, params, max_batch=2, max_context=64, eos_id=-1,
+                      quantized=True, quant_bits=res.bits, prefill_chunk=16)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8)
+                    .astype(np.int32), max_new_tokens=8) for i in range(3)]
+    eng.run(reqs)
+    print(f"   engine sheet bytes={eng.serving_sheet.weight_bytes():.0f}  "
+          f"bits={eng.serving_sheet.bits_by_layer()}")
+    for r in reqs:
+        print(f"   rid={r.rid} out={r.out_tokens}")
+
+
+def pendigits_demo():
+    from repro.core import quantize_inputs
+    from repro.data import pendigits
+    from repro.train.zaal import TrainConfig, train
+
+    print("== pendigits: per-layer q via shift-embedding at q* ==")
+    ds = pendigits.load()
+    (xtr, ytr), (xval, yval) = ds.validation_split()
+    res = train(TrainConfig(structure=(16, 16, 10), epochs=25, seed=3),
+                pendigits.to_unit(xtr), ytr,
+                pendigits.to_unit(xval), yval)
+    xvi = quantize_inputs(pendigits.to_unit(xval))
+    mr = mixed_minq_search(res.weights, res.biases, ("htanh", "hsig"),
+                           xvi, yval)
+    print(f"   uniform q*={mr.q_star} ha={mr.base_ha:.2f}%  ->  "
+          f"per-layer q={mr.qs} ha={mr.ha:.2f}%")
+    for row in mr.sheet.row_strs():
+        print(f"   {row}")
+    print(f"   mixed weight bytes: {mr.sheet.weight_bytes():.0f}")
+
+
+if __name__ == "__main__":
+    lm_demo()
+    pendigits_demo()

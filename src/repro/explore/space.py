@@ -60,7 +60,7 @@ class DesignPoint:
     arch: str
     style: str
     q: int
-    tuner: str            # key into TUNERS ("none" = untuned)
+    tuner: str            # key into TUNERS ("none" = untuned), or "mixedbw"
     ha: float             # hardware accuracy (%) on the evaluator's split
     area_um2: float
     latency_ns: float
@@ -69,6 +69,10 @@ class DesignPoint:
     n_adders: int
     n_mults: int
     tnzd: int
+    # serving-cost axis (DESIGN.md 14): matmul weight bytes at each layer's
+    # effective bitwidth — front("weight_bytes") trades quality vs serving
+    # cost the same way front("area_um2") trades it vs silicon
+    weight_bytes: float = 0.0
 
     def cost(self, metric: str):
         return getattr(self, metric)
@@ -113,7 +117,12 @@ def explore(weights, biases, activations, x_val_int, y_val, *,
     ``tuners`` names variants from :data:`TUNERS`; each tuned variant runs
     once per q level (tuners run on the batched evaluation engine), then the
     whole ``(q, variant)`` grid is scored in ONE stacked evaluator dispatch
-    and priced across every ``(arch, style)`` combo on the cost IR.
+    and priced across every ``(arch, style)`` combo on the cost IR.  The
+    extra variant name ``"mixedbw"`` adds the greedy per-layer mixed-q
+    network (``repro.quant.mixed_minq_search``, DESIGN.md 14) as one more
+    grid point; every point also carries the serving-cost axis
+    ``weight_bytes``, so ``result.front("weight_bytes")`` is the
+    quality-vs-serving-cost Pareto front.
 
     Pass ``evaluator`` (a :class:`~repro.eval.QSweepEvaluator` on the same
     validation split) to share padded rows/jitted forwards with other
@@ -129,7 +138,7 @@ def explore(weights, biases, activations, x_val_int, y_val, *,
         evaluator = QSweepEvaluator(x_val_int, y_val)
     pstats0 = dict(planner.stats)
     ev_calls0 = evaluator.stats["eval_calls"]
-    unknown = [t for t in tuners if t not in TUNERS]
+    unknown = [t for t in tuners if t not in TUNERS and t != "mixedbw"]
     if unknown:
         raise ValueError(f"unknown tuner variants {unknown}")
     if len(activations) != len(weights):
@@ -152,6 +161,19 @@ def explore(weights, biases, activations, x_val_int, y_val, *,
     grid: list[tuple[int, str, IntMLP]] = []
     tune_s = 0.0
     for name in tuners:
+        if name == "mixedbw":
+            # per-layer mixed-bitwidth variant (DESIGN.md 14): runs its own
+            # greedy per-layer min-q search ONCE (it picks its own rungs, so
+            # the q ladder does not apply) on the shared evaluator; the
+            # resulting network embeds at the global q* and scores in the
+            # same stacked dispatch as the rest of the grid
+            from repro.quant.mixed import mixed_minq_search
+            t1 = time.time()
+            mres = mixed_minq_search(weights, biases, activations,
+                                     x_val_int, y_val, evaluator=evaluator)
+            tune_s += time.time() - t1
+            grid.append((mres.q_star, name, mres.mlp))
+            continue
         tuner = TUNERS[name]
         kw = dict(tune_kwargs)
         if name == "parallel-adders" and shared_planner:
@@ -172,9 +194,11 @@ def explore(weights, biases, activations, x_val_int, y_val, *,
     has = evaluator.evaluate([mlp for (_q, _n, mlp) in grid])
 
     # --- cost axis: vectorized cost IR + warm planner ---------------------
+    from repro.quant.mixed import intmlp_serving_sheet
     points = []
     for (q, name, mlp), ha in zip(grid, has):
         t = csd.tnzd(list(mlp.weights) + list(mlp.biases))
+        wb = intmlp_serving_sheet(mlp).weight_bytes()
         for arch, style in arch_styles:
             rep: DesignReport = design_cost(mlp, arch, style, tech=tech,
                                             planner=planner)
@@ -182,7 +206,8 @@ def explore(weights, biases, activations, x_val_int, y_val, *,
                 arch=arch, style=style, q=q, tuner=name, ha=ha,
                 area_um2=rep.area_um2, latency_ns=rep.latency_ns,
                 energy_pj=rep.energy_pj, cycles=rep.cycles,
-                n_adders=rep.n_adders, n_mults=rep.n_mults, tnzd=t))
+                n_adders=rep.n_adders, n_mults=rep.n_mults, tnzd=t,
+                weight_bytes=wb))
 
     return ExploreResult(
         points=points, qs=qs, tuners=tuple(tuners),

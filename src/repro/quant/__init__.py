@@ -1,2 +1,6 @@
-from .ptq import (dequant, min_bitwidth_search, quant_bytes, quantize_tree,  # noqa: F401
+from .ptq import (dequant, min_bitwidth_search, quant_bytes,  # noqa: F401
+                  quantizable_paths, quantize_tree, serving_ledger,
                   serving_quant, sls_rescale)
+from .mixed import (MixedBitwidthResult, MixedQResult,  # noqa: F401
+                    intmlp_serving_sheet, mixed_bitwidth_search,
+                    mixed_minq_search)

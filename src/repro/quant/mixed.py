@@ -1,0 +1,292 @@
+"""Per-matmul mixed-bitwidth PTQ search (paper IV-A at layer granularity).
+
+The paper's minimum-quantization loop picks ONE rung for the whole network;
+its framing, though, is per weight matrix — and Shin et al.'s
+weight-capacity-constrained quantization (PAPERS.md) shows the win of
+spending bits where the network is sensitive.  This module runs that search
+greedily per layer, with the same decision-tree shape as the weight tuners
+(DESIGN.md 7): start every layer at the global min-q rung, each round score
+EVERY one-layer-demotion candidate, demote the cheapest-loss layer, accept
+while the accuracy budget holds.
+
+Two problem adapters share the greedy core:
+
+* :func:`mixed_bitwidth_search` — the LM zoo.  Layers are the quantizable
+  matmul paths of ``quantize_tree``; candidates are mixed ``{path: bits}``
+  qtrees scored through the stacked ``eval_many`` dispatch of
+  ``min_bitwidth_search`` (one device call per greedy round).  The result
+  carries the mixed qtree (servable as-is: ``dequant`` reads the scheme per
+  leaf), the per-path bits, and a priced
+  :class:`~repro.core.hwmodel.ServingCostSheet`.
+* :func:`mixed_minq_search` — the pendigits IntMLP pipeline.  A layer
+  quantized at rung ``qk`` embeds in the global-``q*`` network as
+  ``quantize_value(w, qk) << (q* - qk)`` — bit-identical to native ``qk``
+  arithmetic, because ``act_requant``'s clamp/shift/hsig all commute exactly
+  with the left shift — so every candidate is a plain ``IntMLP`` at
+  ``q=q*`` and the unmodified ``QSweepEvaluator`` scores whole rounds in
+  one stacked forward.
+
+Both adapters keep ``engine="serial"`` as the per-candidate reference loop:
+it scores the SAME candidate set one network at a time, so rung decisions
+and histories are asserted bit-identical in ``tests/test_mixedbw.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.hwmodel import ServingCostSheet
+from repro.core.intmlp import IntMLP, hardware_accuracy
+from repro.core.quantize import find_min_q, quantize_value
+
+from .ptq import (_eval_many_default, dequant, min_bitwidth_search,
+                  quantizable_paths, quantize_tree, serving_ledger)
+
+__all__ = ["MixedBitwidthResult", "MixedQResult", "mixed_bitwidth_search",
+           "mixed_minq_search", "intmlp_serving_sheet"]
+
+
+# ---------------------------------------------------------------------------
+# LM adapter: per-matmul bits over the PoT qtree
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MixedBitwidthResult:
+    """Outcome of the greedy per-matmul search on an LM param tree."""
+    bits: dict            # path -> chosen bitwidth
+    qtree: object         # mixed qtree (each qleaf carries its own bits)
+    base: float           # float-baseline loss
+    loss: float           # loss at the accepted assignment
+    start_bits: int       # the global min-q rung every layer started at
+    history: list         # [(round, [(path, bits, loss), ...], picked, ok)]
+    sheet: ServingCostSheet = field(repr=False, default=None)
+
+
+def _qleaves_by_path(qt):
+    import jax
+    from .ptq import _is_qleaf, _path_str
+    flat = jax.tree_util.tree_flatten_with_path(qt, is_leaf=_is_qleaf)[0]
+    return {_path_str(p): leaf for p, leaf in flat if _is_qleaf(leaf)}
+
+
+def _assemble(params, rung, leafcache, ladder):
+    """Mixed qtree for one rung assignment, from the per-rung leaf caches."""
+    import jax
+    from .ptq import _path_str
+
+    def pick(path, leaf):
+        key = _path_str(path)
+        if key not in rung:
+            return leaf
+        return leafcache[ladder[rung[key]]][key]
+    return jax.tree_util.tree_map_with_path(pick, params)
+
+
+def mixed_bitwidth_search(params, eval_fn, *, budget: float = 0.01,
+                          bit_ladder=(8, 6, 5, 4), engine: str = "batched",
+                          eval_many=None, act_itemsize: float = 2.0,
+                          score_dtype=None) -> MixedBitwidthResult:
+    """Greedy per-matmul bitwidth assignment under a relative loss budget.
+
+    Start = the global :func:`min_bitwidth_search` rung (same engine); each
+    round scores every one-layer-demotion candidate — ``engine="batched"``
+    in ONE stacked ``eval_many`` dispatch, ``engine="serial"`` one
+    ``eval_fn`` call per candidate over the SAME set — demotes the
+    cheapest-loss layer (first index wins ties), and stops when the best
+    candidate breaks ``base * (1 + budget)``.  Decisions are bit-identical
+    across engines because the stacked scorer's per-tree losses match
+    per-tree calls (DESIGN.md 10, extended in 14) — candidates dequantize at
+    ``score_dtype`` (default float32: bf16 dequant makes the stacked
+    reduction order visible in the low mantissa bits, breaking parity).
+    """
+    import jax.numpy as jnp
+    if score_dtype is None:
+        score_dtype = jnp.float32
+    if engine not in ("serial", "batched"):
+        raise ValueError(engine)
+    ladder = list(bit_ladder)
+    base = float(eval_fn(params))
+    thresh = base * (1.0 + budget)
+
+    _, start_bits, g_hist = min_bitwidth_search(
+        params, eval_fn, budget=budget, bit_ladder=bit_ladder,
+        engine=engine, eval_many=eval_many)
+    start_idx = ladder.index(start_bits)
+    cur_loss = dict(h for h in g_hist if h[0] != "float")[start_bits]
+
+    paths = quantizable_paths(params)
+    # quantize each remaining rung ONCE; candidates assemble from the cache
+    leafcache = {b: _qleaves_by_path(quantize_tree(params, bits=b))
+                 for b in ladder[start_idx:]}
+    if engine == "batched" and eval_many is None:
+        eval_many = _eval_many_default(eval_fn)
+
+    rung = {p: start_idx for p in paths}
+    history = []
+    rnd = 0
+    while True:
+        movable = [p for p in paths if rung[p] + 1 < len(ladder)]
+        if not movable:
+            break
+        cands = []
+        for p in movable:
+            r = dict(rung)
+            r[p] += 1
+            cands.append((p, _assemble(params, r, leafcache, ladder)))
+        deqs = [dequant(qt, dtype=score_dtype) for _, qt in cands]
+        if engine == "batched":
+            losses = [float(x) for x in eval_many(deqs)]
+        else:
+            losses = [float(eval_fn(t)) for t in deqs]
+        best = int(np.argmin(losses))          # first index wins ties
+        picked = cands[best][0]
+        ok = losses[best] <= thresh
+        history.append((rnd, [(p, ladder[rung[p] + 1], l)
+                              for (p, _), l in zip(cands, losses)],
+                        picked, ok))
+        if not ok:                             # best violates => all violate
+            break
+        rung[picked] += 1
+        cur_loss = losses[best]
+        rnd += 1
+
+    bits = {p: ladder[rung[p]] for p in paths}
+    qtree = _assemble(params, rung, leafcache, ladder)
+    sheet = serving_ledger(params, bits=bits, act_itemsize=act_itemsize,
+                           meta={"base_loss": base, "loss": cur_loss,
+                                 "budget": budget, "start_bits": start_bits,
+                                 "engine": engine})
+    return MixedBitwidthResult(bits=bits, qtree=qtree, base=base,
+                               loss=cur_loss, start_bits=start_bits,
+                               history=history, sheet=sheet)
+
+
+# ---------------------------------------------------------------------------
+# Pendigits adapter: per-layer q over the IntMLP, shift-embedded at q*
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MixedQResult:
+    """Outcome of the greedy per-layer q search on a trained float MLP."""
+    qs: list              # chosen q per layer
+    mlp: IntMLP           # mixed network, embedded at the global q*
+    ha: float             # hardware accuracy at the accepted assignment
+    base_ha: float        # accuracy at the uniform q* start
+    q_star: int           # global min-q rung (find_min_q)
+    history: list         # [(round, [(layer, q, ha), ...], picked, ok)]
+    sheet: ServingCostSheet = field(repr=False, default=None)
+
+
+def _embed_layer(w, b, qk: int, q_star: int):
+    """Quantize one layer at rung ``qk`` and left-shift into the global
+    ``q*`` scale — bit-identical to native ``qk`` arithmetic under the
+    global ``act_requant`` (clamp/shift/hsig commute with ``<< d``)."""
+    d = q_star - qk
+    return quantize_value(w, qk) << d, quantize_value(b, qk) << d
+
+
+def _effective_bits(w, b) -> int:
+    """Sign-magnitude bits of a layer after normalizing the common trailing
+    zeros (which is exactly the embedding shift for mixed layers)."""
+    vals = np.concatenate([np.abs(np.asarray(w)).ravel(),
+                           np.abs(np.asarray(b)).ravel()])
+    m = int(vals.max(initial=0))
+    if m == 0:
+        return 1
+    nz = vals[vals > 0]
+    tz = min(int(v) & -int(v) for v in nz).bit_length() - 1
+    return 1 + (m >> tz).bit_length()
+
+
+def intmlp_serving_sheet(mlp: IntMLP, *, act_itemsize: float = 1.0,
+                         meta: dict | None = None) -> ServingCostSheet:
+    """Price an (optionally mixed) ``IntMLP`` as a serving ledger: per-layer
+    effective bits after trailing-zero normalization, so a layer embedded at
+    ``q*`` but quantized at ``qk < q*`` prices at its native width."""
+    sheet = ServingCostSheet(meta=dict(meta or {}))
+    for i, (w, b) in enumerate(zip(mlp.weights, mlp.biases)):
+        bits = _effective_bits(w, b)
+        sheet.add_layer(f"layer{i}", bits=bits, k=int(w.shape[0]),
+                        n=int(w.shape[1]), act_itemsize=act_itemsize)
+        sheet.extra_bytes += b.size * bits / 8.0       # bias at layer width
+    return sheet
+
+
+def mixed_minq_search(weights, biases, activations, x_val_int, y_val, *,
+                      budget_pct: float = 0.1, q_min: int = 1,
+                      engine: str = "batched", backend: str = "auto",
+                      evaluator=None, find_kwargs: dict | None = None
+                      ) -> MixedQResult:
+    """Greedy per-layer minimum-q under an absolute accuracy budget.
+
+    Start = the uniform :func:`find_min_q` rung ``q*`` (so the start state
+    IS the paper's IV-A network); each round scores every one-layer
+    ``q - 1`` demotion — all candidates in one ``QSweepEvaluator.evaluate``
+    stacked forward (``engine="batched"``) or one ``hardware_accuracy``
+    call per candidate (``engine="serial"``) — demotes the layer whose
+    candidate keeps the MOST accuracy (first index wins ties), and accepts
+    while ``ha >= ha(q*) - budget_pct``.  Candidates embed at the global
+    ``q*`` scale (see :func:`_embed_layer`), so the evaluator needs no
+    mixed-q support and scores stay bit-identical to the serial oracle.
+    """
+    if engine not in ("serial", "batched"):
+        raise ValueError(engine)
+    qr = find_min_q(weights, biases, activations, x_val_int, y_val,
+                    engine=engine, backend=backend, evaluator=evaluator,
+                    **(find_kwargs or {}))
+    q_star, base_ha = qr.q, qr.ha
+    floor = base_ha - budget_pct
+    n_layers = len(weights)
+
+    if evaluator is None and engine == "batched":
+        from repro.eval import QSweepEvaluator
+        evaluator = QSweepEvaluator(x_val_int, y_val, backend=backend)
+
+    # per-(layer, q) embedded integer weights, computed once
+    cache = {}
+
+    def layer_at(l: int, qk: int):
+        if (l, qk) not in cache:
+            cache[(l, qk)] = _embed_layer(weights[l], biases[l], qk, q_star)
+        return cache[(l, qk)]
+
+    qs = [q_star] * n_layers
+    history = []
+    rnd = 0
+    cur_ha = base_ha
+    while True:
+        movable = [l for l in range(n_layers) if qs[l] > q_min]
+        if not movable:
+            break
+        cands = []
+        for l in movable:
+            trial = list(qs)
+            trial[l] -= 1
+            ws, bs = zip(*(layer_at(i, trial[i]) for i in range(n_layers)))
+            cands.append((l, IntMLP(list(ws), list(bs), list(activations),
+                                    q_star)))
+        if engine == "batched":
+            has = list(evaluator.evaluate([m for _, m in cands]))
+        else:
+            has = [hardware_accuracy(m, x_val_int, y_val)
+                   for _, m in cands]
+        best = int(np.argmax(has))             # first index wins ties
+        picked = cands[best][0]
+        ok = has[best] >= floor
+        history.append((rnd, [(l, qs[l] - 1, ha)
+                              for (l, _), ha in zip(cands, has)],
+                        picked, ok))
+        if not ok:
+            break
+        qs[picked] -= 1
+        cur_ha = has[best]
+        rnd += 1
+
+    ws, bs = zip(*(layer_at(i, qs[i]) for i in range(n_layers)))
+    mlp = IntMLP(list(ws), list(bs), list(activations), q_star)
+    sheet = intmlp_serving_sheet(mlp, meta={"qs": list(qs), "q_star": q_star,
+                                            "ha": cur_ha, "base_ha": base_ha,
+                                            "engine": engine})
+    return MixedQResult(qs=list(qs), mlp=mlp, ha=cur_ha, base_ha=base_ha,
+                        q_star=q_star, history=history, sheet=sheet)

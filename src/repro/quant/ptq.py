@@ -31,7 +31,8 @@ import numpy as np
 from repro.kernels.ops import quantize_pot
 
 __all__ = ["quantize_tree", "dequant", "min_bitwidth_search", "sls_rescale",
-           "quant_bytes", "pack_int4", "unpack_int4", "serving_quant"]
+           "quant_bytes", "pack_int4", "unpack_int4", "serving_quant",
+           "quantizable_paths", "serving_ledger"]
 
 _SKIP_SUBSTR = ("ln", "norm", "router", "gate_i", "gate_r", "lam", "mu",
                 "u", "w0", "bias", "bq", "bk", "bv")
@@ -63,21 +64,58 @@ def unpack_int4(packed):
     return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
 
 
-def quantize_tree(params, *, bits: int = 8):
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", p)) for p in path)
+
+
+def _bits_for(bits, key: str) -> int:
+    """Resolve an int-or-Mapping ``bits`` spec for one leaf path.
+
+    A Mapping assigns a per-matmul rung (the mixed-bitwidth search's
+    output); paths it does not name stay at the 8-bit default rung."""
+    if isinstance(bits, int):
+        return bits
+    return int(bits.get(key, 8))
+
+
+def _quantize_leaf(leaf, b: int):
+    """One matmul weight -> PoT qleaf dict at ``b`` bits (nibble-packed
+    when b <= 4 and the last dim is even)."""
+    axis = tuple(range(leaf.ndim - 1))         # per-output-channel
+    wq, e = quantize_pot(leaf.astype(jnp.float32), bits=b, axis=axis)
+    if b <= 4 and leaf.shape[-1] % 2 == 0:
+        return {"q": pack_int4(wq), "exp": e, "bits": b, "packed": True}
+    return {"q": wq, "exp": e, "bits": b}
+
+
+def quantize_tree(params, *, bits=8):
     """Replace big matmul weights by {"q": int8, "exp": int32} dicts.
-    At bits <= 4 the int4 mantissas are nibble-packed (pack_int4)."""
+    At bits <= 4 the int4 mantissas are nibble-packed (pack_int4).
+
+    ``bits`` is a single global rung (int) or a ``{path: bits}`` Mapping for
+    mixed-bitwidth trees — each qleaf carries its own ``bits``, and since
+    :func:`dequant` reads the scheme per leaf, a mixed tree dequantizes (and
+    therefore serves) with no further plumbing."""
     def q(path, leaf):
-        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        key = _path_str(path)
         if not _should_quantize(key, leaf):
             return leaf
-        axis = tuple(range(leaf.ndim - 1))     # per-output-channel
-        wq, e = quantize_pot(leaf.astype(jnp.float32), bits=bits,
-                             axis=axis)
-        if bits <= 4 and leaf.shape[-1] % 2 == 0:
-            return {"q": pack_int4(wq), "exp": e, "bits": bits,
-                    "packed": True}
-        return {"q": wq, "exp": e, "bits": bits}
+        return _quantize_leaf(leaf, _bits_for(bits, key))
     return jax.tree_util.tree_map_with_path(q, params)
+
+
+def quantizable_paths(params) -> list:
+    """Path strings of the matmul weights :func:`quantize_tree` would
+    quantize, in tree order — the mixed-bitwidth search's layer list."""
+    paths = []
+
+    def visit(path, leaf):
+        key = _path_str(path)
+        if hasattr(leaf, "ndim") and _should_quantize(key, leaf):
+            paths.append(key)
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, params)
+    return paths
 
 
 def _is_qleaf(x):
@@ -113,7 +151,7 @@ def quant_bytes(tree) -> int:
     return total
 
 
-def serving_quant(params, *, bits: int = 8, dtype=jnp.bfloat16):
+def serving_quant(params, *, bits=8, dtype=jnp.bfloat16):
     """Serve-side hook: quantize once, return the resident representation.
 
     Returns ``(qtree, deq, resident_bytes)`` where ``qtree`` is the int8-PoT
@@ -122,8 +160,9 @@ def serving_quant(params, *, bits: int = 8, dtype=jnp.bfloat16):
     dispatches (exact PoT dequant at the requested activation dtype), and
     ``resident_bytes`` is the serving footprint (``quant_bytes``).  Both
     serving engines build their quantized path from this one hook, so the
-    bit ladder chosen by :func:`min_bitwidth_search` plugs straight into
-    serving via ``bits=``.
+    bit ladder chosen by :func:`min_bitwidth_search` — or the per-matmul
+    ``{path: bits}`` assignment from ``mixed_bitwidth_search`` — plugs
+    straight into serving via ``bits=``.
     """
     qt = quantize_tree(params, bits=bits)
 
@@ -131,6 +170,38 @@ def serving_quant(params, *, bits: int = 8, dtype=jnp.bfloat16):
         return dequant(tree, dtype=dtype)
 
     return qt, deq, quant_bytes(qt)
+
+
+def serving_ledger(params, *, bits=8, act_itemsize: float = 2.0,
+                   meta: dict | None = None):
+    """Price a (params, bits) pair as a :class:`~repro.core.hwmodel.
+    ServingCostSheet` — weight bytes at each matmul's searched rung,
+    activation bytes per token, int-ops per token, roofline intensity.
+
+    Weight bytes are priced at the LOGICAL bitwidth (size * bits / 8 plus
+    the per-channel int32 scale), so a 6->5 demotion shows in the ledger
+    even though the physical int8 container only shrinks at the nibble-pack
+    boundary — the ledger prices the paper's datapath, not today's storage.
+    Unquantized residue (norms, biases, routers) lands in ``extra_bytes``.
+    """
+    from repro.core.hwmodel import ServingCostSheet
+
+    sheet = ServingCostSheet(meta=dict(meta or {}))
+    extra = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = _path_str(path)
+        if not _should_quantize(key, leaf):
+            extra += leaf.size * np.dtype(leaf.dtype).itemsize
+            continue
+        n = int(leaf.shape[-1])
+        sheet.add_layer(key, bits=_bits_for(bits, key),
+                        k=int(leaf.shape[-2]), n=n, size=int(leaf.size),
+                        scale_bytes=4.0 * n, act_itemsize=act_itemsize)
+    sheet.extra_bytes = extra
+    if not isinstance(bits, int):
+        sheet.meta.setdefault("bits", {k: _bits_for(bits, k)
+                                       for k in sheet.bits_by_layer()})
+    return sheet
 
 
 def _eval_many_default(eval_fn):

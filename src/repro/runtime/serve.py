@@ -37,7 +37,7 @@ import numpy as np
 
 from repro.nn.model import Model
 from repro.nn.types import ArchConfig
-from repro.quant import serving_quant
+from repro.quant import serving_ledger, serving_quant
 from repro.runtime import kvcache
 from repro.runtime.kvcache import ADMIT_REJECT, ADMIT_TRUNCATE, PagedKVCache
 
@@ -113,7 +113,7 @@ class ServeEngine:
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  max_context: int = 512, eos_id: int = 0,
-                 quantized: bool = False, quant_bits: int = 8,
+                 quantized: bool = False, quant_bits=8,
                  temperature: float = 0.0, seed: int = 0,
                  prefill_chunk: int = 64, admission: str = "reject",
                  data_parallel: bool = False, mesh=None,
@@ -136,14 +136,20 @@ class ServeEngine:
         if quantized:
             # weights live in HBM as int8 + PoT exponents; dequantization
             # happens INSIDE the jitted steps (exact: PoT scales), so the
-            # resident bytes really are the quantized ones (cf. quant_bytes)
+            # resident bytes really are the quantized ones (cf. quant_bytes).
+            # quant_bits is a global rung (int) OR a {path: bits} Mapping —
+            # a mixed_bitwidth_search assignment serves with no extra code,
+            # since every qleaf carries its own scheme through dequant.
             self.quant_tree, deq, self.quant_bytes = serving_quant(
                 params, bits=quant_bits, dtype=dt)
             self.params = self.quant_tree
+            self.serving_sheet = serving_ledger(
+                params, bits=quant_bits, act_itemsize=float(dt.itemsize))
         else:
             self.params = params
             self.quant_tree = None
             self.quant_bytes = None
+            self.serving_sheet = None
             deq = lambda t: t                                   # noqa: E731
         self.cache = PagedKVCache(self.model, max_batch, max_context)
         self._decode = self._build_decode(deq, data_parallel, mesh)
@@ -407,7 +413,8 @@ class ReferenceEngine:
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  max_context: int = 512, eos_id: int = 0,
-                 quantized: bool = False, temperature: float = 0.0,
+                 quantized: bool = False, quant_bits=8,
+                 temperature: float = 0.0,
                  seed: int = 0, admission: str = "reject"):
         self.cfg = cfg
         self.model = Model(cfg)
@@ -417,9 +424,13 @@ class ReferenceEngine:
         self.temperature = temperature
         self.admission = admission
         self.rng = np.random.default_rng(seed)
+        self.serving_sheet = None
         if quantized:
+            dt = jnp.dtype(cfg.dtype)
             self.quant_tree, deq, _ = serving_quant(
-                params, dtype=jnp.dtype(cfg.dtype))
+                params, bits=quant_bits, dtype=dt)
+            self.serving_sheet = serving_ledger(
+                params, bits=quant_bits, act_itemsize=float(dt.itemsize))
             self.params = self.quant_tree
             self._decode = jax.jit(
                 lambda qt, cache, tok, pos: self.model.decode_step(

@@ -224,3 +224,93 @@ def test_engine_matches_oracle():
     assert eng_assigns == orc_assigns
     assert {(rid, s) for _, a, rid, s in eng.events if a == "release"} == \
            {(rid, s) for _, a, rid, s in oracle if a == "release"}
+
+
+# ------------------------------- engine vs oracle fuzz over random traces
+
+@pytest.fixture(scope="module")
+def fuzz_model():
+    import jax
+    from repro.nn import Model, get_config
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              n_layers=2, vocab=64, remat=False)
+    m = Model(cfg)
+    return cfg, m.init(jax.random.PRNGKey(0))
+
+
+def _fuzz_trace(rng, max_context=12):
+    """Random arrival/deadline/prompt-length trace: arrival step, prompt
+    length (spanning the admission limit so reject/truncate both fire),
+    decode budget, optional queue deadline."""
+    trace = [dict(rid=rid,
+                  t=int(rng.integers(1, 7)),
+                  plen=int(rng.integers(1, max_context + 4)),
+                  max_new=int(rng.integers(1, 4)),
+                  ds=(None if rng.random() < 0.5
+                      else int(rng.integers(1, 7))))
+             for rid in range(int(rng.integers(2, 8)))]
+    policy = "truncate" if rng.random() < 0.5 else "reject"
+    return trace, policy, int(rng.integers(1, 3))
+
+
+def _check_engine_oracle_fuzz(fuzz_model, seed):
+    """Drive the live engine on an integer step clock (submit with now=t
+    just before step(now=t), so engine step index == oracle time) and
+    replay the admitted arrivals + observed finishes through `simulate`:
+    assignment sequence, expiries and releases must coincide STEP FOR
+    STEP — the fixed-scenario cross-check above, generalized."""
+    import jax  # noqa: F401  (engine dispatches)
+    from repro.runtime.serve import Request, ServeEngine
+
+    cfg, params = fuzz_model
+    rng = np.random.default_rng(seed)
+    trace, policy, max_batch = _fuzz_trace(rng)
+    eng = ServeEngine(cfg, params, max_batch=max_batch, max_context=12,
+                      eos_id=-1, prefill_chunk=5, admission=policy)
+    by_t = {}
+    for it in trace:
+        by_t.setdefault(it["t"], []).append(it)
+    arrivals, deadlines = [], {}
+    t = 0
+    while by_t or eng.queue or eng.slots:
+        t += 1
+        assert t < 500, "fuzz trace did not drain"
+        for it in by_t.pop(t, []):
+            r = Request(rid=it["rid"],
+                        prompt=rng.integers(0, cfg.vocab,
+                                            it["plen"]).astype(np.int32),
+                        max_new_tokens=it["max_new"], deadline_s=it["ds"])
+            if eng.submit(r, now=float(t)) == "queued":
+                arrivals.append((t, r.rid))
+                if it["ds"] is not None:
+                    deadlines[r.rid] = t + it["ds"]
+        eng.step(now=float(t))
+
+    finishes = {rid: s for s, a, rid, _ in eng.events if a == "release"}
+    oracle = simulate(arrivals, finishes, eng.max_batch,
+                      deadlines=deadlines, horizon=t + 1)
+    # identical timing, order AND slot ids for assignments...
+    assert [(s, rid, sl) for s, a, rid, sl in eng.events if a == "assign"] \
+        == [(s, rid, sl) for s, a, rid, sl in oracle if a == "assign"]
+    # ...identical expiry decisions (which request, which step)...
+    assert {(s, rid) for s, a, rid, _ in eng.events if a == "expire"} == \
+        {(s, rid) for s, a, rid, _ in oracle if a == "expire"}
+    # ...and the oracle frees the same slot at the same step
+    assert {(s, rid, sl) for s, a, rid, sl in eng.events
+            if a == "release"} == \
+        {(s, rid, sl) for s, a, rid, sl in oracle if a == "release"}
+    _check_no_double_booking(
+        [(s, a, rid, sl) for s, a, rid, sl in eng.events
+         if a in ("assign", "release")], eng.max_batch)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_engine_oracle_fuzz_seeded(fuzz_model, seed):
+    _check_engine_oracle_fuzz(fuzz_model, 1000 + seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_engine_oracle_fuzz_hypothesis(fuzz_model, seed):
+        _check_engine_oracle_fuzz(fuzz_model, seed)

@@ -1,0 +1,424 @@
+"""Mixed-bitwidth search + serving cost ledger (DESIGN.md 14).
+
+Property suite for the greedy per-layer rung assigners
+(``repro.quant.mixed``) and the :class:`ServingCostSheet` ledger:
+
+* serial == batched decision parity (pendigits IntMLP and LM qtree forms);
+* shift-embedding exactness: a layer quantized at rung ``qk`` and embedded
+  at the global ``q*`` computes bit-identically to native ``qk`` arithmetic;
+* per-layer ladder monotonicity, tested honestly — on dyadic
+  (exactly-representable) weights every rung realizes the SAME network, so
+  loosening a rung provably never decreases accuracy; on the ledger side
+  lowering any layer's bits strictly lowers weight bytes;
+* budget monotonicity: a larger budget never yields a costlier assignment
+  (the greedy picks are budget-independent, so the accepted demotion
+  sequence of a smaller budget is a prefix of a larger one's);
+* mixed result never costlier than the global ``min_bitwidth_search``
+  ladder at equal budget;
+* ServingCostSheet JSON round-trip exactness;
+* serving parity: a mixed-bits qtree serves greedy-bit-identically to the
+  dequantized tree and across ServeEngine/ReferenceEngine.
+
+Seeded-numpy cases always run; hypothesis widens the search when installed
+(the ``test_mless.py`` fast-lane split).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hwmodel import ServingCostSheet, ServingLayerCost
+from repro.core.intmlp import IntMLP, act_requant, forward_int
+from repro.core.quantize import quantize_value
+from repro.quant import (dequant, min_bitwidth_search, mixed_bitwidth_search,
+                         mixed_minq_search, quantizable_paths, quantize_tree,
+                         serving_ledger)
+from repro.quant.mixed import _embed_layer, intmlp_serving_sheet
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------- fixtures
+
+def _rand_float_net(structure, rng):
+    ws = [rng.uniform(-1, 1, (a, b))
+          for a, b in zip(structure[:-1], structure[1:])]
+    bs = [rng.uniform(-0.5, 0.5, b) for b in structure[1:]]
+    return ws, bs
+
+
+def _rand_data(structure, n, rng):
+    x = rng.integers(-128, 128, (n, structure[0]))
+    y = rng.integers(0, structure[-1], n)
+    return x, y
+
+
+ACTS = ("htanh", "hsig")
+
+
+@pytest.fixture(scope="module")
+def toy_tree():
+    """Synthetic LM-shaped param tree + deterministic eval_fn (the
+    test_sweep parity-test idiom — no model training in the loop)."""
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {"wq": jax.random.normal(k1, (8, 16)) * 0.1,
+              "wk": jax.random.normal(k2, (8, 16)) * 0.03,
+              "wv": jax.random.normal(k3, (8, 16)) * 0.05,
+              "ln": jnp.ones((16,))}            # 1-D: stays float
+
+    def eval_fn(p):
+        # integer-valued loss: sums of small integers are exact in float32
+        # under ANY reduction order, so serial/stacked scoring parity is
+        # decision-exact even at knife-edge budgets
+        return (4.0 * jnp.sum(jnp.round(jnp.abs(p["wq"]) * 256.0))
+                + 2.0 * jnp.sum(jnp.round(jnp.abs(p["wk"]) * 256.0))
+                + 1.0 * jnp.sum(jnp.round(jnp.abs(p["wv"]) * 256.0))
+                + jnp.sum(p["ln"]))
+
+    return params, eval_fn
+
+
+@pytest.fixture(scope="module")
+def lm32():
+    from repro.nn import Model, get_config
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              n_layers=2, vocab=64, remat=False,
+                              dtype="float32")
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    return cfg, m, params, {"tokens": toks, "labels": toks}
+
+
+# ----------------------------------------- shift-embedding exactness (14.1)
+
+def _forward_mixed_native(ws_int, bs_int, acts, qs, x_int):
+    """Reference mixed-q forward: every layer requantizes at its OWN q."""
+    from repro.core.intmlp import FRAC
+    a = x_int.astype(np.int64)
+    for w, b, act, q in zip(ws_int, bs_int, acts, qs):
+        acc = a @ w.astype(np.int64) + (b.astype(np.int64) << FRAC)
+        a = act_requant(acc, act, q)
+    return a
+
+
+def _check_embedding_exact(rng):
+    structure = tuple(rng.integers(3, 9, rng.integers(2, 4)))
+    ws, bs = _rand_float_net(structure, rng)
+    acts = [("htanh", "hsig", "relu", "lin")[int(rng.integers(0, 4))]
+            for _ in ws]
+    q_star = int(rng.integers(2, 7))
+    qs = [int(rng.integers(1, q_star + 1)) for _ in ws]
+    x, _ = _rand_data(structure, 17, rng)
+    native = _forward_mixed_native(
+        [quantize_value(w, qk) for w, qk in zip(ws, qs)],
+        [quantize_value(b, qk) for b, qk in zip(bs, qs)], acts, qs, x)
+    emb_w, emb_b = zip(*(_embed_layer(w, b, qk, q_star)
+                         for w, b, qk in zip(ws, bs, qs)))
+    embedded = forward_int(IntMLP(list(emb_w), list(emb_b), acts, q_star), x)
+    np.testing.assert_array_equal(embedded, native)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_shift_embedding_bit_exact_seeded(seed):
+    _check_embedding_exact(np.random.default_rng(seed))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_shift_embedding_bit_exact_hypothesis(seed):
+        _check_embedding_exact(np.random.default_rng(seed))
+
+
+# ------------------------------------------------- ladder monotonicity (14.1)
+
+def _dyadic_net(structure, rng, frac=1):
+    """Weights/biases that are exact multiples of 2^-frac: quantize_value
+    is exact at every rung q >= frac, so ALL rungs realize the same
+    network — the honest form of 'loosening never decreases accuracy'."""
+    ws = [rng.integers(-2, 3, (a, b)).astype(np.float64) / (1 << frac)
+          for a, b in zip(structure[:-1], structure[1:])]
+    bs = [rng.integers(-1, 2, b).astype(np.float64) / (1 << frac)
+          for b in structure[1:]]
+    return ws, bs
+
+
+def _check_dyadic_rungs_equal(rng):
+    structure = (6, 5, 4)
+    ws, bs = _dyadic_net(structure, rng)
+    q_star = int(rng.integers(2, 6))
+    ref_w = [quantize_value(w, q_star) for w in ws]
+    x, y = _rand_data(structure, 23, rng)
+    from repro.core.intmlp import hardware_accuracy
+    ref = IntMLP(ref_w, [quantize_value(b, q_star) for b in bs],
+                 list(ACTS), q_star)
+    ref_ha = hardware_accuracy(ref, x, y)
+    for layer in range(len(ws)):
+        for qk in range(1, q_star + 1):
+            ew, eb = _embed_layer(ws[layer], bs[layer], qk, q_star)
+            np.testing.assert_array_equal(ew, ref_w[layer])
+            m = ref.copy()
+            m.weights[layer], m.biases[layer] = ew, eb
+            assert hardware_accuracy(m, x, y) == ref_ha  # never decreases
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_dyadic_ladder_monotone_seeded(seed):
+    _check_dyadic_rungs_equal(np.random.default_rng(100 + seed))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_dyadic_ladder_monotone_hypothesis(seed):
+        _check_dyadic_rungs_equal(np.random.default_rng(seed))
+
+
+def test_ledger_bits_monotone(toy_tree):
+    """Lowering any one path's bits strictly lowers the ledger's weight
+    bytes and never touches other rows (the cost side of the ladder)."""
+    params, _ = toy_tree
+    paths = quantizable_paths(params)
+    assert paths == ["wk", "wq", "wv"]           # tree order
+    base_bits = {p: 8 for p in paths}
+    base = serving_ledger(params, bits=base_bits)
+    for p in paths:
+        for b in (6, 5, 4):
+            lower = serving_ledger(params, bits={**base_bits, p: b})
+            assert lower.weight_bytes() < base.weight_bytes()
+            same = [r for r in lower.layers if r.name != p]
+            for r, r0 in zip(same, [r for r in base.layers if r.name != p]):
+                assert r == r0
+
+
+# ---------------------------------------------- greedy engine parity (14.2)
+
+def test_mixed_minq_engine_parity_pendigits():
+    """Serial per-candidate scoring and stacked batched scoring make
+    bit-identical rung decisions on the pendigits pipeline."""
+    from repro.core import quantize_inputs
+    from repro.data import pendigits
+    from repro.train.zaal import TrainConfig, train
+
+    ds = pendigits.load()
+    (xtr, ytr), (xval, yval) = ds.validation_split()
+    res = train(TrainConfig(structure=(16, 10, 10), epochs=5, seed=3),
+                pendigits.to_unit(xtr), ytr,
+                pendigits.to_unit(xval), yval)
+    xvi = quantize_inputs(pendigits.to_unit(xval))
+    rs = mixed_minq_search(res.weights, res.biases, ACTS, xvi, yval,
+                           engine="serial")
+    rb = mixed_minq_search(res.weights, res.biases, ACTS, xvi, yval,
+                           engine="batched")
+    assert (rs.qs, rs.ha, rs.q_star, rs.history) == \
+        (rb.qs, rb.ha, rb.q_star, rb.history)
+    for ws, wb in zip(rs.mlp.weights, rb.mlp.weights):
+        np.testing.assert_array_equal(ws, wb)
+    # the mixed ledger never exceeds the uniform q* ladder's
+    uni = intmlp_serving_sheet(
+        IntMLP([quantize_value(w, rb.q_star) for w in res.weights],
+               [quantize_value(b, rb.q_star) for b in res.biases],
+               list(ACTS), rb.q_star))
+    assert rb.sheet.weight_bytes() <= uni.weight_bytes()
+    assert all(q <= rb.q_star for q in rb.qs)
+
+
+def test_mixed_bitwidth_engine_parity_toy(toy_tree):
+    params, eval_fn = toy_tree
+    for budget in (1e-9, 0.01, 0.05, 10.0):
+        rs = mixed_bitwidth_search(params, eval_fn, budget=budget,
+                                   engine="serial")
+        rb = mixed_bitwidth_search(params, eval_fn, budget=budget,
+                                   engine="batched")
+        assert (rs.bits, rs.start_bits, rs.history) == \
+            (rb.bits, rb.start_bits, rb.history), budget
+        # mixed <= global at equal budget (start = global rung, demotions
+        # only shrink the ledger)
+        _, gbits, _ = min_bitwidth_search(params, eval_fn, budget=budget)
+        gsheet = serving_ledger(params, bits=gbits)
+        assert rb.sheet.weight_bytes() <= gsheet.weight_bytes()
+
+
+def test_mixed_bitwidth_engine_parity_lm(lm32):
+    """The acceptance config: bit-identical decisions on a reduced LM."""
+    cfg, m, params, batch = lm32
+
+    def ev(p):
+        return m.loss(p, batch)[0]
+
+    rs = mixed_bitwidth_search(params, ev, budget=0.05, bit_ladder=(8, 5),
+                               engine="serial")
+    rb = mixed_bitwidth_search(params, ev, budget=0.05, bit_ladder=(8, 5),
+                               engine="batched")
+    assert (rs.bits, rs.start_bits, rs.history) == \
+        (rb.bits, rb.start_bits, rb.history)
+    assert set(rb.bits) == set(quantizable_paths(params))
+    assert rb.sheet.weight_bytes() == serving_ledger(
+        params, bits=rb.bits).weight_bytes()
+
+
+def test_budget_monotonicity(toy_tree):
+    """Greedy picks are budget-independent, so a larger budget's accepted
+    demotions extend a smaller one's: weight bytes never increase."""
+    params, eval_fn = toy_tree
+    budgets = (1e-9, 0.005, 0.02, 0.1, 1.0)
+    wbs = []
+    for budget in budgets:
+        r = mixed_bitwidth_search(params, eval_fn, budget=budget)
+        thresh = r.base * (1.0 + budget)
+        for _rnd, _cands, _p, ok in r.history:
+            if ok:                     # every accepted round is in budget
+                assert min(l for _, _, l in _cands) <= thresh
+        wbs.append(r.sheet.weight_bytes())
+    assert wbs == sorted(wbs, reverse=True)
+
+
+# ---------------------------------------------- ServingCostSheet round-trip
+
+def _rand_sheet(rng):
+    sheet = ServingCostSheet(extra_bytes=float(rng.uniform(0, 1e6)),
+                             meta={"seed": int(rng.integers(1 << 30))})
+    for i in range(int(rng.integers(1, 7))):
+        k, n = int(rng.integers(1, 512)), int(rng.integers(1, 512))
+        copies = int(rng.integers(1, 4))
+        sheet.add_layer(f"l{i}", bits=int(rng.integers(1, 9)), k=k, n=n,
+                        size=copies * k * n,
+                        scale_bytes=float(rng.uniform(0, 4096)),
+                        act_itemsize=float(rng.choice((1.0, 2.0, 4.0))))
+    return sheet
+
+
+def _check_sheet_roundtrip(sheet, tmp_path):
+    d = sheet.to_dict()
+    back = ServingCostSheet.from_dict(d)
+    assert back.to_dict() == d                       # dict-level exactness
+    for a, b in zip(back.layers, sheet.layers):
+        assert a == b                                # frozen dataclass eq
+    assert back.extra_bytes == sheet.extra_bytes
+    p = tmp_path / "sheet.json"
+    sheet.save(str(p))
+    loaded = ServingCostSheet.load(str(p))
+    assert loaded.to_dict() == d                     # json floats exact
+    assert loaded.weight_bytes() == sheet.weight_bytes()
+    assert loaded.arithmetic_intensity() == sheet.arithmetic_intensity()
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_sheet_json_roundtrip_seeded(seed, tmp_path):
+    _check_sheet_roundtrip(_rand_sheet(np.random.default_rng(seed)),
+                           tmp_path)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31))
+    def test_sheet_json_roundtrip_hypothesis(tmp_path_factory, seed):
+        _check_sheet_roundtrip(
+            _rand_sheet(np.random.default_rng(seed)),
+            tmp_path_factory.mktemp("sheets"))
+
+
+def test_sheet_totals_fold():
+    s = ServingCostSheet()
+    s.add_layer("a", bits=8, k=4, n=8)
+    s.add_layer("b", bits=4, k=8, n=2, size=32, scale_bytes=8.0,
+                act_itemsize=2.0)
+    assert s.layers[0].weight_bytes == 32.0
+    assert s.layers[1] == ServingLayerCost("b", 4, 8, 2, 32, 8.0, 2.0)
+    assert s.layers[1].weight_bytes == 32 * 4 / 8 + 8.0
+    assert s.layers[1].copies == 2
+    assert s.layers[1].act_bytes == 2 * (8 + 2) * 2.0
+    assert s.weight_bytes() == sum(r.weight_bytes for r in s.layers)
+    assert s.ops_per_token() == 2 * 32 + 2 * 32
+    s.extra_bytes = 10.0
+    assert s.total_bytes() == s.weight_bytes() + 10.0
+    assert s.arithmetic_intensity() == \
+        s.ops_per_token() / (s.total_bytes() + s.act_bytes())
+
+
+# ----------------------------------------------------- serving parity (14.3)
+
+def test_mixed_qtree_per_leaf_independence(toy_tree):
+    """A mixed {path: bits} tree is EXACTLY each leaf quantized at its own
+    rung: serving it is serving each layer at its searched bits."""
+    params, _ = toy_tree
+    bits = {"wq": 8, "wk": 5, "wv": 4}
+    mixed = quantize_tree(params, bits=bits)
+    for path, b in bits.items():
+        solo = quantize_tree(params, bits=b)[path]
+        for k in solo:
+            np.testing.assert_array_equal(np.asarray(mixed[path][k]),
+                                          np.asarray(solo[k]))
+
+
+def test_mixed_serving_parity_engines(lm32):
+    """Greedy decode of a mixed-bits qtree is bit-identical to serving the
+    dequantized tree, and ReferenceEngine == ServeEngine on the same
+    mixed config (extends the uniform-bits parity in test_serve_engine)."""
+    from repro.runtime.serve import ReferenceEngine, Request, ServeEngine
+
+    cfg, m, params, _ = lm32
+    paths = quantizable_paths(params)
+    bits = {p: b for p, b in zip(paths, [8, 6, 5, 8, 6, 5, 8, 6])}
+    rng = np.random.default_rng(0)
+    # equal-length prompts: the reference engine pads nothing, so parity
+    # must be exact (the test_serve_engine equal-lengths idiom)
+    prompts = [rng.integers(0, cfg.vocab, 6) for _ in range(3)]
+
+    def serve(engcls, p, quant, **kw):
+        eng = engcls(cfg, p, max_batch=2, max_context=32, eos_id=-1,
+                     quantized=quant, **kw)
+        reqs = [Request(rid=i, prompt=np.asarray(pr, np.int32),
+                        max_new_tokens=5) for i, pr in enumerate(prompts)]
+        eng.run(reqs)
+        return [r.out_tokens for r in reqs], eng
+
+    deq_tree = dequant(quantize_tree(params, bits=bits), dtype=jnp.float32)
+    float_out, _ = serve(ServeEngine, deq_tree, False, prefill_chunk=4)
+    mixed_out, eng = serve(ServeEngine, params, True, quant_bits=bits,
+                           prefill_chunk=4)
+    assert mixed_out == float_out
+    ref_out, reng = serve(ReferenceEngine, params, True, quant_bits=bits)
+    assert ref_out == mixed_out
+    # both engines expose the priced ledger for the served assignment
+    assert eng.serving_sheet.bits_by_layer() == bits
+    assert reng.serving_sheet.weight_bytes() == \
+        eng.serving_sheet.weight_bytes()
+    # and the mixed tree is strictly smaller than uniform 8-bit residency
+    assert eng.serving_sheet.weight_bytes() < serving_ledger(
+        params, bits=8).weight_bytes()
+
+
+def test_explore_weight_bytes_axis():
+    """explore() carries the serving-cost axis on every point and accepts
+    the "mixedbw" variant (DESIGN.md 14.4) — front("weight_bytes") is a
+    valid Pareto front."""
+    from repro.core import quantize_inputs
+    from repro.data import pendigits
+    from repro.explore import explore
+    from repro.train.zaal import TrainConfig, train
+
+    ds = pendigits.load()
+    (xtr, ytr), (xval, yval) = ds.validation_split()
+    res = train(TrainConfig(structure=(16, 10, 10), epochs=5, seed=3),
+                pendigits.to_unit(xtr), ytr,
+                pendigits.to_unit(xval), yval)
+    xvi = quantize_inputs(pendigits.to_unit(xval))
+    r = explore(res.weights, res.biases, ACTS, xvi, yval,
+                tuners=("none", "mixedbw"), q_span=1,
+                arch_styles=(("parallel", "behavioral"),))
+    assert all(p.weight_bytes > 0 for p in r.points)
+    mixed = [p for p in r.points if p.tuner == "mixedbw"]
+    assert len(mixed) == 1
+    front = r.front("weight_bytes")
+    assert front                       # non-empty, sorted by cost ascending
+    costs = [p.weight_bytes for p in front]
+    assert costs == sorted(costs)
