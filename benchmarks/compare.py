@@ -1,0 +1,113 @@
+"""Diff fresh benchmark artifacts against the committed baseline.
+
+``python -m benchmarks.compare BENCH_serve.json BENCH_mixedbw.json``
+
+For each artifact the working-tree copy is the CANDIDATE and
+``git show HEAD:<path>`` is the BASELINE.  Lanes are matched by their
+identity fields (every non-numeric lane key: ``quant``, ``rate_rps``,
+``prefill_batch``, ``lane``, ...) and every shared numeric metric is
+printed as ``baseline -> candidate (delta, pct)``.  The tool is
+REPORT-ONLY: it always exits 0.  Guard rails, not gates —
+
+* differing ``config_hash`` means the runs are not like-for-like; the
+  file is skipped with a note instead of printing misleading deltas
+  (missing hashes on either side compare as unknown and are allowed
+  through, flagged);
+* a lane present on only one side is listed as added/removed;
+* a missing baseline (file not committed yet) or missing candidate is a
+  note, not an error, so CI can run this on the very first PR that adds
+  an artifact.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+
+
+def _load_baseline(path: str):
+    """The committed copy of *path*, or None if HEAD doesn't have it."""
+    try:
+        blob = subprocess.run(["git", "show", f"HEAD:{path}"],
+                              capture_output=True, check=True).stdout
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    try:
+        return json.loads(blob)
+    except json.JSONDecodeError:
+        return None
+
+
+# fields that NAME a lane rather than measure it; everything else numeric
+# is treated as a metric and diffed
+_IDENTITY = ("lane", "quant", "rate_rps", "prefill_batch", "kv_block_size",
+             "n_requests", "structure", "arch")
+
+
+def _lane_key(lane: dict):
+    """Identity of a lane: its naming fields, order-independent."""
+    return tuple((k, lane[k]) for k in _IDENTITY if k in lane)
+
+
+def _numeric_items(lane: dict):
+    return {k: float(v) for k, v in lane.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)}
+
+
+def _fmt_key(key) -> str:
+    return ",".join(f"{k}={v}" for k, v in key) or "<unkeyed>"
+
+
+def compare_file(path: str) -> list[str]:
+    out = [f"== {path} =="]
+    try:
+        with open(path) as f:
+            cand = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        out.append(f"  no candidate ({e.__class__.__name__}); skipping")
+        return out
+    base = _load_baseline(path)
+    if base is None:
+        out.append("  no committed baseline at HEAD; nothing to compare")
+        return out
+    bh, ch = base.get("config_hash"), cand.get("config_hash")
+    if bh is not None and ch is not None and bh != ch:
+        out.append(f"  config_hash differs (baseline {bh} vs candidate {ch});"
+                   " runs are not like-for-like — skipping lane deltas")
+        return out
+    if bh is None or ch is None:
+        out.append("  note: config_hash missing on "
+                   + ("both sides" if bh is None and ch is None else
+                      ("baseline" if bh is None else "candidate"))
+                   + "; comparing anyway")
+    if base.get("smoke") != cand.get("smoke"):
+        out.append(f"  note: smoke flags differ (baseline "
+                   f"{base.get('smoke')} vs candidate {cand.get('smoke')})")
+    blanes = {_lane_key(l): l for l in base.get("lanes", [])}
+    clanes = {_lane_key(l): l for l in cand.get("lanes", [])}
+    for key in blanes.keys() - clanes.keys():
+        out.append(f"  - removed lane: {_fmt_key(key)}")
+    for key in clanes.keys() - blanes.keys():
+        out.append(f"  + new lane: {_fmt_key(key)}")
+    for key in sorted(blanes.keys() & clanes.keys()):
+        bl, cl = _numeric_items(blanes[key]), _numeric_items(clanes[key])
+        out.append(f"  lane {_fmt_key(key)}")
+        for m in sorted(bl.keys() & cl.keys()):
+            b, c = bl[m], cl[m]
+            d = c - b
+            pct = f" ({d / b:+.1%})" if b else ""
+            mark = "" if d == 0 else f"  {b:g} -> {c:g} ({d:+g}){pct}"
+            out.append(f"    {m}: {c:g}" if not mark else f"    {m}:{mark}")
+    return out
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:]) or \
+        ["BENCH_serve.json", "BENCH_mixedbw.json"]
+    for p in paths:
+        print("\n".join(compare_file(p)))
+    return 0          # report-only by design: never fails the build
+
+
+if __name__ == "__main__":
+    sys.exit(main())

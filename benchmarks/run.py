@@ -521,55 +521,97 @@ def bench_serving():
     n_req = 6 if SMOKE else 24
     rates = (50.0,) if SMOKE else (20.0, 100.0)    # offered req/s
     max_new = 6 if SMOKE else 16
+    top = max(rates)
+    # the lane grid: the historical (quant x rate) sweep at prefill_batch=1,
+    # plus the BATCHED-PREFILL headline pair at the highest offered rate
+    # (pb=4 vs the grid's pb=1, everything else equal — the TTFT claim) and
+    # one block-paged lane so the block-table gather path runs on the
+    # replay clock too
+    lane_cfgs = [dict(quant=q, rate=r, prefill_batch=1, kv_block_size=0)
+                 for q in (False, True) for r in rates]
+    lane_cfgs += [dict(quant=False, rate=top, prefill_batch=4,
+                       kv_block_size=0),
+                  dict(quant=False, rate=top, prefill_batch=4,
+                       kv_block_size=16)]
     rows, lanes = [], []
-    for quant in (False, True):
-        for rate in rates:
-            rng = np.random.default_rng(0)          # seeded arrival stream
-            eng = ServeEngine(cfg, params, max_batch=4, max_context=64,
-                              eos_id=-1, quantized=quant, prefill_chunk=16,
-                              admission="truncate")
-            # warm the jitted prefill/decode dispatches so the replay times
-            # steady-state serving, not compilation
-            eng.run([Request(rid=-1, prompt=np.arange(4, dtype=np.int32),
-                             max_new_tokens=2)])
-            # drop the warmup from the aggregate counters so decode_tok_s
-            # divides by replay-only decode wall time
-            eng.stats.update(prefill_tokens=0, decode_tokens=0,
-                             prefill_s=0.0, decode_s=0.0)
-            arrive = np.cumsum(rng.exponential(1.0 / rate, n_req))
-            reqs = [Request(rid=i,
-                            prompt=rng.integers(
-                                0, cfg.vocab,
-                                int(rng.integers(4, 24))).astype(np.int32),
-                            max_new_tokens=max_new) for i in range(n_req)]
-            t0, i = time.time(), 0
-            while i < n_req or eng.queue or eng.slots:
-                elapsed = time.time() - t0
-                while i < n_req and arrive[i] <= elapsed:
-                    eng.submit(reqs[i])
-                    i += 1
-                if not (eng.queue or eng.slots):
-                    time.sleep(min(max(arrive[i] - elapsed, 0.0), 0.01))
-                    continue
-                eng.step()
-            wall = time.time() - t0
-            s = summarize(reqs, eng)
-            tag = "int8pot" if quant else "bf16"
-            rows.append((f"serving/{tag}/rate{rate:g}", wall * 1e6,
-                         f"decode_tok_s={s['decode_tok_s']:.1f};"
-                         f"first_tok_p50_ms={s['p50_first_token_s']*1e3:.1f};"
-                         f"first_tok_p99_ms={s['p99_first_token_s']*1e3:.1f};"
-                         f"total_p50_ms={s['p50_total_s']*1e3:.1f};"
-                         f"total_p99_ms={s['p99_total_s']*1e3:.1f};"
-                         f"done={s['done']}"))
-            lanes.append({"quant": tag, "rate_rps": rate, "n_requests": n_req,
-                          "wall_s": wall, **s})
+    for lc in lane_cfgs:
+        quant, rate = lc["quant"], lc["rate"]
+        pb, bs = lc["prefill_batch"], lc["kv_block_size"]
+        rng = np.random.default_rng(0)          # seeded arrival stream
+        eng = ServeEngine(cfg, params, max_batch=4, max_context=64,
+                          eos_id=-1, quantized=quant, prefill_chunk=16,
+                          prefill_batch=pb, kv_block_size=bs,
+                          admission="truncate")
+        # warm the jitted prefill/decode dispatches so the replay times
+        # steady-state serving, not compilation
+        eng.run([Request(rid=-1, prompt=np.arange(4, dtype=np.int32),
+                         max_new_tokens=2)])
+        # drop the warmup from the aggregate counters so decode_tok_s
+        # divides by replay-only decode wall time
+        eng.stats.update(prefill_tokens=0, decode_tokens=0,
+                         prefill_s=0.0, decode_s=0.0)
+        arrive = np.cumsum(rng.exponential(1.0 / rate, n_req))
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(
+                            0, cfg.vocab,
+                            int(rng.integers(4, 24))).astype(np.int32),
+                        max_new_tokens=max_new) for i in range(n_req)]
+        t0, i = time.time(), 0
+        while i < n_req or eng.queue or eng.slots:
+            elapsed = time.time() - t0
+            while i < n_req and arrive[i] <= elapsed:
+                eng.submit(reqs[i])
+                i += 1
+            if not (eng.queue or eng.slots):
+                time.sleep(min(max(arrive[i] - elapsed, 0.0), 0.01))
+                continue
+            eng.step()
+        wall = time.time() - t0
+        s = summarize(reqs, eng)
+        tag = "int8pot" if quant else "bf16"
+        name = f"serving/{tag}/rate{rate:g}"
+        if pb > 1:
+            name += f"/pb{pb}"
+        if bs:
+            name += f"/bs{bs}"
+        rows.append((name, wall * 1e6,
+                     f"decode_tok_s={s['decode_tok_s']:.1f};"
+                     f"first_tok_p50_ms={s['p50_first_token_s']*1e3:.1f};"
+                     f"first_tok_p99_ms={s['p99_first_token_s']*1e3:.1f};"
+                     f"total_p50_ms={s['p50_total_s']*1e3:.1f};"
+                     f"total_p99_ms={s['p99_total_s']*1e3:.1f};"
+                     f"done={s['done']}"))
+        lanes.append({"quant": tag, "rate_rps": rate, "n_requests": n_req,
+                      "prefill_batch": pb, "kv_block_size": bs,
+                      "wall_s": wall, **s})
+    # the batched-prefill claim: at the highest offered rate, ingesting up
+    # to 4 chunks per step must beat the single-chunk head-of-line config
+    # on p99 time-to-first-token (asserted on the full run; smoke's 6
+    # requests are too few for a stable p99, so smoke only reports)
+    base = next(l for l in lanes if l["quant"] == "bf16"
+                and l["rate_rps"] == top and l["prefill_batch"] == 1)
+    batched = next(l for l in lanes if l["quant"] == "bf16"
+                   and l["rate_rps"] == top and l["prefill_batch"] == 4
+                   and l["kv_block_size"] == 0)
+    rows.append(("serving/prefill_batch_p99_ttft", 0.0,
+                 f"pb1={base['p99_first_token_s']*1e3:.1f}ms;"
+                 f"pb4={batched['p99_first_token_s']*1e3:.1f}ms;"
+                 f"pb1_decode_tok_s={base['decode_tok_s']:.1f};"
+                 f"pb4_decode_tok_s={batched['decode_tok_s']:.1f}"))
+    if not SMOKE:
+        assert batched["p99_first_token_s"] < base["p99_first_token_s"], (
+            "batched prefill must strictly improve p99 TTFT at the highest "
+            f"arrival rate: pb4={batched['p99_first_token_s']:.4f}s vs "
+            f"pb1={base['p99_first_token_s']:.4f}s")
     # the engine/traffic config the lanes ran under, hashed so cross-PR
     # trajectory tooling can refuse to compare unlike runs
     econf = {"arch": "qwen2-0.5b (reduced, 2L)", "n_layers": 2,
              "vocab": cfg.vocab, "max_batch": 4, "max_context": 64,
              "prefill_chunk": 16, "admission": "truncate", "eos_id": -1,
              "engine_seed": 0, "arrival_seed": 0, "rates": list(rates),
+             "lanes": [{k: lc[k] for k in
+                        ("quant", "rate", "prefill_batch", "kv_block_size")}
+                       for lc in lane_cfgs],
              "n_requests": n_req, "max_new_tokens": max_new, "smoke": SMOKE}
     with open("BENCH_serve.json", "w") as f:
         json.dump({"smoke": SMOKE, "arch": "qwen2-0.5b (reduced, 2L)",

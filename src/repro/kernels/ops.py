@@ -15,10 +15,11 @@ import numpy as np
 
 from . import ref
 from .csd_matvec import csd_matvec_kernel, csd_qsweep_kernel
+from .paged_gather import paged_gather_kernel
 from .qmatmul import qmatmul_kernel
 
 __all__ = ["qmatmul", "csd_matvec", "csd_qsweep", "quantize_pot",
-           "csd_expand", "csd_expand_stack"]
+           "csd_expand", "csd_expand_stack", "paged_gather"]
 
 
 def csd_expand(w_int, depth: int | None = None) -> np.ndarray:
@@ -124,3 +125,17 @@ def csd_qsweep(x_int, planes, *, bm: int = 128, bn: int = 128,
     y = csd_qsweep_kernel(xq, pq, bm=min(bm, xq.shape[1]), bn=bn,
                           interpret=interpret)
     return y[:, :M, :N]
+
+
+def paged_gather(leaf, table, *, interpret: bool | None = None):
+    """Block-paged KV gather: (NB, bs, H, D) pool + (B, nb) block table ->
+    (B, nb, bs, H, D) logical rows (scalar-prefetch DMA gather — the table
+    rides in SMEM and each grid step's index map picks its physical block).
+    Sentinel entries >= NB clamp to NB - 1, exactly like ``jnp.take``; the
+    garbage they read is masked downstream.  Bit-identical to the jnp
+    ``take`` reference path (it's a copy — no arithmetic)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    NB = leaf.shape[0]
+    tbl = jnp.minimum(table.astype(jnp.int32), NB - 1)
+    return paged_gather_kernel(leaf, tbl, interpret=interpret)

@@ -1,0 +1,58 @@
+"""Block-table KV gather: assemble logical cache rows from a block pool.
+
+The block-paged serving cache (DESIGN.md 15) stores K/V as a pool of
+fixed-size blocks ``(NB, bs, H, D)``; a per-slot block table ``(B, nb)``
+maps logical block j of slot b to its physical block.  Attention needs the
+logical rows ``(B, nb * bs, H, D)`` contiguous, which is a pure gather —
+``jnp.take`` is the reference path, this kernel is the TPU route.
+
+The idiom is SCALAR PREFETCH (``pltpu.PrefetchScalarGridSpec``): the block
+table rides in SMEM ahead of the kernel body, so each grid step's input
+BlockSpec *index map* reads ``table[b, j]`` and DMAs exactly that physical
+block from HBM into VMEM — the kernel body is a straight copy, and no
+gathered intermediate ever materializes in HBM.  Off-TPU the same call runs
+in interpret mode (CI covers it); on TPU it compiles to Mosaic unchanged.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(table_ref, leaf_ref, out_ref):
+    # the gather already happened in the index map: leaf_ref IS the
+    # physical block table_ref[b, j] for this (b, j) grid step
+    del table_ref
+    out_ref[0, 0] = leaf_ref[0]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_gather_kernel(leaf, table, *, interpret: bool = False):
+    """leaf: (NB, bs, H, D); table: (B, nb) int32 physical block ids
+    (entries must be < NB — callers clamp the unallocated-sentinel NB to
+    NB - 1, matching ``jnp.take``'s clamp; the garbage block a clamped
+    entry reads is masked by the caller's position/length masks).
+    Returns (B, nb, bs, H, D)."""
+    NB, bs, H, D = leaf.shape
+    B, nb = table.shape
+    table = table.astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, bs, H, D),
+                         lambda b, j, tref: (tref[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bs, H, D),
+                               lambda b, j, tref: (b, j, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nb, bs, H, D), leaf.dtype),
+        interpret=interpret,
+    )(table, leaf)

@@ -34,6 +34,15 @@ def main(argv=None):
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--prefill-batch", type=int, default=1,
+                    help="prefill chunks ingested per engine step (one "
+                         "fixed-shape batched dispatch)")
+    ap.add_argument("--kv-block-size", type=int, default=0,
+                    help="block-paged KV block size (0 = contiguous slot "
+                         "rows); must divide --context")
+    ap.add_argument("--kv-gather", choices=("take", "pallas"),
+                    default="take",
+                    help="block-table gather route (block-paged mode only)")
     ap.add_argument("--admission", choices=("reject", "truncate"),
                     default="truncate")
     ap.add_argument("--deadline", type=float, default=None,
@@ -61,6 +70,9 @@ def main(argv=None):
                           quantized=args.quantized, quant_bits=args.bits,
                           temperature=args.temperature,
                           prefill_chunk=args.prefill_chunk,
+                          prefill_batch=args.prefill_batch,
+                          kv_block_size=args.kv_block_size,
+                          kv_gather=args.kv_gather,
                           admission=args.admission,
                           data_parallel=args.data_parallel)
     rng = np.random.default_rng(0)

@@ -11,8 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .layers import (chunked_attention, decode_attention, rms_norm, rope,
-                     swiglu)
+from .layers import (chunked_attention, decode_attention, gather_block_rows,
+                     rms_norm, rope, swiglu)
 from .types import ArchConfig
 
 
@@ -99,7 +99,8 @@ def attention_seq(p, x, cfg: ArchConfig, *, positions=None, window: int = 0,
 
 
 def attention_step(p, x, cache, pos, cfg: ArchConfig, *, window: int = 0,
-                   pin=None, pin_q=None):
+                   pin=None, pin_q=None, block_table=None,
+                   kv_gather: str = "take"):
     """One decode token. cache: {k: (B,C,Hkv,D), v: ...}; pos: scalar int or
     a per-row (B,) vector (paged serving: every slot decodes at its own
     sequence position).
@@ -109,6 +110,15 @@ def attention_step(p, x, cache, pos, cfg: ArchConfig, *, window: int = 0,
     ``pin`` (from Model._pin_kv) re-asserts the sequence-sharded cache layout
     after the update so GSPMD keeps the cache resident and runs the softmax
     distributed over sequence shards (EXPERIMENTS.md S Perf iteration 3).
+
+    ``block_table`` switches the cache to the BLOCK-PAGED layout: leaves are
+    (NB, bs, Hkv, D) pools of fixed-size blocks and ``block_table`` is a
+    (B, nb) int32 map (logical block j of row b -> physical block).  The
+    token's K/V is scattered at (table[b, pos // bs], pos % bs) with
+    ``mode="drop"`` (sentinel NB entries and dummy rows vanish instead of
+    clamping), and attention reads the gathered logical rows — bit-identical
+    to the contiguous path because masked positions contribute exactly 0.
+    Requires per-row ``pos``; windows and pins are contiguous-only.
     """
     B = x.shape[0]
     hd = cfg.head_dim_
@@ -117,6 +127,28 @@ def attention_step(p, x, cache, pos, cfg: ArchConfig, *, window: int = 0,
     posv = jnp.full((B, 1), pos) if pos.ndim == 0 else pos.reshape(B, 1)
     q = rope(q, posv, cfg.rope_theta)
     k = rope(k, posv, cfg.rope_theta)
+    if block_table is not None:
+        if pos.ndim == 0:
+            raise ValueError("block-paged attention_step needs per-row pos")
+        NB, bs = cache["k"].shape[0], cache["k"].shape[1]
+        nb = block_table.shape[1]
+        lb = posv[:, 0] // bs                                  # logical block
+        phys = jnp.where(
+            lb < nb,
+            jnp.take_along_axis(block_table,
+                                jnp.minimum(lb, nb - 1)[:, None], axis=1)[:, 0],
+            NB)                                                # (B,)
+        off = posv[:, 0] % bs
+        k_cache = cache["k"].at[phys, off].set(
+            k[:, 0].astype(cache["k"].dtype), mode="drop")
+        v_cache = cache["v"].at[phys, off].set(
+            v[:, 0].astype(cache["v"].dtype), mode="drop")
+        krow = gather_block_rows(k_cache, block_table, engine=kv_gather)
+        vrow = gather_block_rows(v_cache, block_table, engine=kv_gather)
+        cache_len = jnp.minimum(posv[:, 0] + 1, nb * bs)
+        out = decode_attention(q, krow, vrow, cache_len, window=0)
+        out = out.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+        return out, {"k": k_cache, "v": v_cache}
     C = cache["k"].shape[1]
     if pos.ndim == 0:
         slot = pos % C

@@ -150,14 +150,20 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 def chunk_cache_attention(q, k_cache, v_cache, q_pos):
-    """Prompt-chunk attention against a paged KV cache row.
+    """Prompt-chunk attention against paged KV cache rows.
 
-    q: (B, c, Hq, D) chunk queries; caches: (B, C, Hkv, D); q_pos: (c,) the
+    q: (B, c, Hq, D) chunk queries; caches: (B, C, Hkv, D); q_pos: the
     GLOBAL positions of the chunk queries (the chunk's K/V must already be
-    written into the cache at those positions).  Each query attends causally
-    to every cache position <= its own global position — older chunks, the
-    chunk prefix, and itself; right-pad queries land beyond every real
-    position so their rows are garbage the caller must ignore.
+    written into the cache at those positions) — either (c,) shared by every
+    batch row, or (B, c) per-row (batched multi-slot prefill: each row is a
+    chunk of a DIFFERENT request at its own offset).  Each query attends
+    causally to every cache position <= its own global position — older
+    chunks, the chunk prefix, and itself; right-pad queries land beyond
+    every real position so their rows are garbage the caller must ignore.
+    Masked positions score exactly NEG_INF, whose exp underflows to 0.0 in
+    f32, so garbage cache content at masked positions can never leak into
+    the output — this is what makes outputs independent of both the chunk
+    schedule and the physical cache layout.
 
     Like ``decode_attention``, GQA runs as a GROUPED einsum (never
     materializes head-repeated K/V), so a sequence-sharded cache keeps its
@@ -170,12 +176,42 @@ def chunk_cache_attention(q, k_cache, v_cache, q_pos):
     qg = q.reshape(B, c, Hkv, G, D)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale
-    valid = jnp.arange(S)[None, :] <= q_pos[:, None]            # (c, S)
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    q_pos = jnp.asarray(q_pos)
+    if q_pos.ndim == 1:
+        valid = jnp.arange(S)[None, :] <= q_pos[:, None]        # (c, S)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+    else:
+        valid = jnp.arange(S)[None, None, :] <= q_pos[:, :, None]  # (B, c, S)
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, c, Hq, D).astype(q.dtype)
+
+
+def gather_block_rows(leaf, table, *, engine: str = "take"):
+    """Assemble logical cache rows from a block-paged KV leaf.
+
+    leaf: (NB, bs, ...) pool of fixed-size blocks; table: (B, nb) int32
+    block table mapping logical block j of row b to physical block
+    ``table[b, j]`` (entries may carry the out-of-range sentinel NB for
+    not-yet-allocated blocks — their gathered content is garbage that the
+    caller's length/position masks must hide, exactly like the contiguous
+    cache's stale rows).  Returns (B, nb * bs, ...) logical rows.
+
+    ``engine="take"`` is the jnp reference path (``jnp.take`` clamps the
+    sentinel to NB - 1, reading an arbitrary real block — safe because
+    masked); ``engine="pallas"`` routes through the scalar-prefetch gather
+    kernel in ``repro.kernels`` (interpret mode off-TPU), bit-identical.
+    """
+    NB, bs = leaf.shape[0], leaf.shape[1]
+    B, nb = table.shape
+    if engine == "pallas":
+        from repro.kernels import paged_gather
+        out = paged_gather(leaf, table)
+    else:
+        out = jnp.take(leaf, jnp.minimum(table, NB - 1), axis=0)
+    return out.reshape(B, nb * bs, *leaf.shape[2:])
 
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):

@@ -531,60 +531,89 @@ class Model:
             return logits.astype(jnp.float32), cache
         raise NotImplementedError(cfg.family)
 
-    def prefill_chunk(self, params, cache, tokens, slot, offset, n_valid):
-        """Chunked prompt ingestion into ONE slot of a paged decode cache.
+    def prefill_chunks(self, params, cache, tokens, slots, offsets, n_valid,
+                       block_table=None, kv_gather: str = "take"):
+        """Batched chunked prompt ingestion into MANY slots of a paged cache.
 
-        tokens: (1, c) int32, right-padded chunk of a prompt; ``slot`` the
-        cache row to fill, ``offset`` the global position of tokens[0, 0],
-        ``n_valid`` <= c the real token count.  Writes the chunk's K/V into
-        ``cache`` rows [slot, offset:offset+c) and returns (logits at the
-        last valid position, (1, V) f32; updated cache).  Padded tail
-        positions ARE written (fixed chunk shapes keep one compiled
-        executable) but land beyond every real query position, so they are
-        masked by the chunk attention and later overwritten in place by the
-        next chunk or decode write before the slot length ever reaches them.
+        tokens: (P, c) int32, right-padded chunks of UP TO P different
+        prompts; ``slots``/``offsets``/``n_valid``: (P,) int32 — row i's
+        cache slot, the global position of tokens[i, 0], and its real token
+        count.  Writes each row's chunk K/V into its own slot and returns
+        (per-row logits at the last valid position, (P, V) f32; updated
+        cache).  One fixed-shape dispatch ingests P chunks, so the serving
+        engine's prefill throughput no longer head-of-line-blocks on the
+        oldest prompt.
 
-        Caller contract: ``offset + c`` must not exceed the cache context —
-        ``jax.lax.dynamic_update_slice`` CLAMPS an out-of-range start index,
-        which would shift the whole chunk (pad garbage included) backwards
-        over earlier valid positions.  The serving engine shrinks the final
-        chunk host-side to honor this.
+        Writes are SCATTERS with ``mode="drop"``: any position >= context
+        vanishes instead of clamping (the `dynamic_update_slice` clamp was
+        the PR-6 boundary bug — callers no longer shrink the final chunk).
+        Dummy rows ride along exactly like the decode dispatch's: pass
+        offset = context so every write drops, and ignore the row's logits.
+        Padded tail positions of real rows ARE written but land beyond every
+        real query position, so the chunk attention masks them and the next
+        chunk / decode write overwrites them in place before the slot length
+        ever reaches them.
+
+        ``block_table`` (NB-sentinel (n_slots, nb) int32 map) switches the
+        cache leaves to the block-paged (NB, bs, Hkv, D) layout: writes
+        scatter at (table[slot, p // bs], p % bs) and reads gather the
+        logical rows (``kv_gather`` picks jnp ``take`` or the Pallas
+        kernel).  Bit-identical to the contiguous path — masked positions
+        contribute exactly zero weight.
 
         Supports the standard-KV families (dense / moe).  Exactness: for
         dense models the chunk outputs are bitwise independent of the chunk
         size (attention row i sees exactly cache[0..offset+i], all other ops
         are position-local); for MoE the capacity bound C = ceil(cf*c*K/E)
-        applies per chunk, so chunking can change which tokens are dropped —
-        the engine documents this as the chunked-prefill capacity caveat.
+        applies per chunk ROW (routing tables are per batch row, so batching
+        rows changes nothing), but chunking can change which tokens are
+        dropped — the engine documents this as the chunked-prefill capacity
+        caveat.
         """
-        from .layers import chunk_cache_attention, rope
+        from .layers import chunk_cache_attention, gather_block_rows, rope
         cfg = self.cfg
         if cfg.family not in ("dense", "moe"):
             raise NotImplementedError(
-                f"prefill_chunk supports standard-KV families, not "
+                f"prefill_chunks supports standard-KV families, not "
                 f"{cfg.family!r} (use Model.prefill / ReferenceEngine)")
-        c = tokens.shape[1]
-        x = params["embed"].astype(self.dtype)[tokens]            # (1,c,d)
-        positions = offset + jnp.arange(c)                         # (c,)
+        P, c = tokens.shape
+        slots = jnp.asarray(slots)
+        offsets = jnp.asarray(offsets)
+        x = params["embed"].astype(self.dtype)[tokens]            # (P,c,d)
+        positions = offsets[:, None] + jnp.arange(c)[None, :]      # (P,c)
 
         def body(h, inp):
-            pl, kv = inp                       # kv: (B, C, Hkv, D) full page
+            pl, kv = inp          # kv: (n_slots, C, Hkv, D) or (NB, bs, ...)
             hn = rms_norm(h, pl["ln1"].astype(h.dtype), cfg.norm_eps)
             q, k, v = blocks._qkv(pl["attn"], hn, cfg)
-            q = rope(q, positions[None, :], cfg.rope_theta)
-            k = rope(k, positions[None, :], cfg.rope_theta)
-            kc = jax.lax.dynamic_update_slice(
-                kv["k"], k.astype(kv["k"].dtype), (slot, offset, 0, 0))
-            vc = jax.lax.dynamic_update_slice(
-                kv["v"], v.astype(kv["v"].dtype), (slot, offset, 0, 0))
-            C = kc.shape[1]
-            hd = cfg.head_dim_
-            krow = jax.lax.dynamic_slice(
-                kc, (slot, 0, 0, 0), (1, C, cfg.n_kv_heads, hd))
-            vrow = jax.lax.dynamic_slice(
-                vc, (slot, 0, 0, 0), (1, C, cfg.n_kv_heads, hd))
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            if block_table is None:
+                kc = kv["k"].at[slots[:, None], positions].set(
+                    k.astype(kv["k"].dtype), mode="drop")
+                vc = kv["v"].at[slots[:, None], positions].set(
+                    v.astype(kv["v"].dtype), mode="drop")
+                krow = jnp.take(kc, slots, axis=0)     # (P, C, Hkv, D)
+                vrow = jnp.take(vc, slots, axis=0)
+            else:
+                NB, bs = kv["k"].shape[0], kv["k"].shape[1]
+                rows = jnp.take(block_table, slots, axis=0)     # (P, nb)
+                nb = rows.shape[1]
+                lb = positions // bs                             # (P, c)
+                phys = jnp.where(
+                    lb < nb,
+                    jnp.take_along_axis(rows, jnp.minimum(lb, nb - 1),
+                                        axis=1),
+                    NB)
+                off = positions % bs
+                kc = kv["k"].at[phys, off].set(
+                    k.astype(kv["k"].dtype), mode="drop")
+                vc = kv["v"].at[phys, off].set(
+                    v.astype(kv["v"].dtype), mode="drop")
+                krow = gather_block_rows(kc, rows, engine=kv_gather)
+                vrow = gather_block_rows(vc, rows, engine=kv_gather)
             a = chunk_cache_attention(q, krow, vrow, positions)
-            h = h + a.reshape(1, c, -1) @ pl["attn"]["wo"].astype(h.dtype)
+            h = h + a.reshape(P, c, -1) @ pl["attn"]["wo"].astype(h.dtype)
             hn = rms_norm(h, pl["ln2"].astype(h.dtype), cfg.norm_eps)
             if cfg.n_experts:
                 y, _ = blocks.moe_apply(pl["moe"], hn, cfg)
@@ -596,15 +625,32 @@ class Model:
             body, x, (params["layers"], {"k": cache["k"], "v": cache["v"]}),
             unroll=_unroll(cfg.n_layers))
         x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
-        xl = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
-        logits = xl @ params["lm_head"].astype(x.dtype)
-        return logits.astype(jnp.float32)[:, 0], new_cache
+        idx = jnp.clip(jnp.asarray(n_valid) - 1, 0, c - 1)         # (P,)
+        xl = jnp.take_along_axis(x, idx[:, None, None], axis=1)    # (P,1,d)
+        logits = xl[:, 0] @ params["lm_head"].astype(x.dtype)
+        return logits.astype(jnp.float32), new_cache
 
-    def decode_step(self, params, cache, tokens, pos):
+    def prefill_chunk(self, params, cache, tokens, slot, offset, n_valid):
+        """Single-slot chunked prompt ingestion: the P = 1 special case of
+        :meth:`prefill_chunks` (kept as the historical entry point).
+        tokens: (1, c); slot/offset/n_valid scalars.  Returns ((1, V) f32
+        logits at the last valid position, updated cache)."""
+        return self.prefill_chunks(
+            params, cache, tokens,
+            jnp.asarray(slot).reshape(1), jnp.asarray(offset).reshape(1),
+            jnp.asarray(n_valid).reshape(1))
+
+    def decode_step(self, params, cache, tokens, pos, block_table=None,
+                    kv_gather: str = "take"):
         """One token for the whole batch. tokens: (B, 1); pos: scalar int32
-        or a (B,) per-row position vector (paged serving)."""
+        or a (B,) per-row position vector (paged serving).  ``block_table``
+        (dense/moe only) switches the KV leaves to the block-paged layout —
+        see :func:`repro.nn.blocks.attention_step`."""
         cfg = self.cfg
         hd = cfg.head_dim_
+        if block_table is not None and cfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"block-paged decode supports dense/moe, not {cfg.family!r}")
         x = params["embed"].astype(self.dtype)[tokens]         # (B,1,d)
 
         if cfg.family in ("dense", "moe", "vlm"):
@@ -612,8 +658,11 @@ class Model:
                 h = carry
                 pl, kv = inp
                 hn = rms_norm(h, pl["ln1"].astype(h.dtype), cfg.norm_eps)
+                pins = (dict(pin=self._pin_kv, pin_q=self._pin_rep)
+                        if block_table is None else
+                        dict(block_table=block_table, kv_gather=kv_gather))
                 a, kv2 = blocks.attention_step(pl["attn"], hn, kv, pos, cfg,
-                                               pin=self._pin_kv, pin_q=self._pin_rep)
+                                               **pins)
                 h = h + a
                 hn = rms_norm(h, pl["ln2"].astype(h.dtype), cfg.norm_eps)
                 if cfg.n_experts:

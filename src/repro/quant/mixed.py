@@ -38,7 +38,8 @@ import numpy as np
 
 from repro.core.hwmodel import ServingCostSheet
 from repro.core.intmlp import IntMLP, hardware_accuracy
-from repro.core.quantize import find_min_q, quantize_value
+from repro.core.quantize import (QuantResult, find_min_q, quantize_mlp,
+                                 quantize_value)
 
 from .ptq import (_eval_many_default, dequant, min_bitwidth_search,
                   quantizable_paths, quantize_tree, serving_ledger)
@@ -83,6 +84,33 @@ def _assemble(params, rung, leafcache, ladder):
     return jax.tree_util.tree_map_with_path(pick, params)
 
 
+def _mean_eval_fns(fns):
+    """Calibration-set scoring for the LM adapter: a SEQUENCE of eval_fns
+    (one per calibration batch) collapses to their mean.
+
+    Returns ``(eval_fn, make_eval_many)``.  Parity discipline: both engines
+    compute the SAME per-batch floats (the stacked scorer's per-tree losses
+    already match per-tree calls batch by batch) and reduce them with the
+    SAME ``np.mean`` over the same ordering, so serial-vs-batched decisions
+    stay bit-identical with a calibration set exactly as without one.
+    """
+    fns = list(fns)
+
+    def eval_one(tree):
+        return float(np.mean([float(f(tree)) for f in fns]))
+
+    def make_eval_many():
+        manys = [_eval_many_default(f) for f in fns]
+
+        def eval_many(trees):
+            per = [[float(x) for x in m(trees)] for m in manys]
+            return [float(np.mean([p[i] for p in per]))
+                    for i in range(len(trees))]
+        return eval_many
+
+    return eval_one, make_eval_many
+
+
 def mixed_bitwidth_search(params, eval_fn, *, budget: float = 0.01,
                           bit_ladder=(8, 6, 5, 4), engine: str = "batched",
                           eval_many=None, act_itemsize: float = 2.0,
@@ -99,12 +127,21 @@ def mixed_bitwidth_search(params, eval_fn, *, budget: float = 0.01,
     per-tree calls (DESIGN.md 10, extended in 14) — candidates dequantize at
     ``score_dtype`` (default float32: bf16 dequant makes the stacked
     reduction order visible in the low mantissa bits, breaking parity).
+
+    ``eval_fn`` may be a SEQUENCE of eval callables — a calibration set of
+    eval batches — in which case every candidate (and the float baseline) is
+    scored on the MEAN loss across the set; decisions remain bit-identical
+    across engines (see :func:`_mean_eval_fns`).
     """
     import jax.numpy as jnp
     if score_dtype is None:
         score_dtype = jnp.float32
     if engine not in ("serial", "batched"):
         raise ValueError(engine)
+    if isinstance(eval_fn, (list, tuple)):
+        eval_fn, make_many = _mean_eval_fns(eval_fn)
+        if eval_many is None and engine == "batched":
+            eval_many = make_many()
     ladder = list(bit_ladder)
     base = float(eval_fn(params))
     thresh = base * (1.0 + budget)
@@ -213,6 +250,41 @@ def intmlp_serving_sheet(mlp: IntMLP, *, act_itemsize: float = 1.0,
     return sheet
 
 
+def _mean_ha(cands, engine, evaluators, xs, ys):
+    """Calibration-set scoring for the IntMLP adapter: mean hardware
+    accuracy of each candidate across the batches, per-batch values computed
+    by the stacked evaluator (``batched``) or ``hardware_accuracy``
+    (``serial``) — bit-identical per batch, identically reduced."""
+    if engine == "batched":
+        per = [[float(h) for h in ev.evaluate(cands)] for ev in evaluators]
+    else:
+        per = [[float(hardware_accuracy(m, x, y)) for m in cands]
+               for x, y in zip(xs, ys)]
+    return [float(np.mean([p[i] for p in per])) for i in range(len(cands))]
+
+
+def _find_min_q_mean(weights, biases, activations, xs, ys, *,
+                     budget_pct: float = 0.1, q_max: int = 16,
+                     chance_pct: float = 0.0, engine: str = "batched",
+                     evaluators=None) -> QuantResult:
+    """:func:`find_min_q`'s stopping walk, scored on the calibration-set
+    MEAN accuracy.  The walk itself is serial over q (the stop rule chains
+    ha(q) to ha(q-1)); per-q scoring goes through :func:`_mean_ha`, so the
+    walk's decisions are bit-identical across engines."""
+    history = []
+    prev_ha = 0.0
+    best = None
+    for q in range(1, q_max + 1):
+        mlp = quantize_mlp(weights, biases, activations, q)
+        ha = _mean_ha([mlp], engine, evaluators, xs, ys)[0]
+        history.append((q, ha))
+        best = QuantResult(q=q, mlp=mlp, ha=ha, history=history)
+        if ha > chance_pct and ha - prev_ha <= budget_pct:
+            return best
+        prev_ha = ha
+    return best
+
+
 def mixed_minq_search(weights, biases, activations, x_val_int, y_val, *,
                       budget_pct: float = 0.1, q_min: int = 1,
                       engine: str = "batched", backend: str = "auto",
@@ -229,17 +301,38 @@ def mixed_minq_search(weights, biases, activations, x_val_int, y_val, *,
     while ``ha >= ha(q*) - budget_pct``.  Candidates embed at the global
     ``q*`` scale (see :func:`_embed_layer`), so the evaluator needs no
     mixed-q support and scores stay bit-identical to the serial oracle.
+
+    ``x_val_int``/``y_val`` may be SEQUENCES of validation batches — a
+    calibration set — in which case ``q*`` and every greedy candidate are
+    scored on the MEAN accuracy across the set (``evaluator`` may then be a
+    matching sequence of per-batch ``QSweepEvaluator``s to share); decisions
+    remain bit-identical across engines (see :func:`_mean_ha`).
     """
     if engine not in ("serial", "batched"):
         raise ValueError(engine)
-    qr = find_min_q(weights, biases, activations, x_val_int, y_val,
-                    engine=engine, backend=backend, evaluator=evaluator,
-                    **(find_kwargs or {}))
+    multi = isinstance(x_val_int, (list, tuple))
+    evaluators = None
+    if multi:
+        xs, ys = list(x_val_int), list(y_val)
+        if engine == "batched":
+            if evaluator is None:
+                from repro.eval import QSweepEvaluator
+                evaluators = [QSweepEvaluator(x, y, backend=backend)
+                              for x, y in zip(xs, ys)]
+            else:
+                evaluators = list(evaluator)
+        qr = _find_min_q_mean(weights, biases, activations, xs, ys,
+                              engine=engine, evaluators=evaluators,
+                              **(find_kwargs or {}))
+    else:
+        qr = find_min_q(weights, biases, activations, x_val_int, y_val,
+                        engine=engine, backend=backend, evaluator=evaluator,
+                        **(find_kwargs or {}))
     q_star, base_ha = qr.q, qr.ha
     floor = base_ha - budget_pct
     n_layers = len(weights)
 
-    if evaluator is None and engine == "batched":
+    if not multi and evaluator is None and engine == "batched":
         from repro.eval import QSweepEvaluator
         evaluator = QSweepEvaluator(x_val_int, y_val, backend=backend)
 
@@ -266,7 +359,9 @@ def mixed_minq_search(weights, biases, activations, x_val_int, y_val, *,
             ws, bs = zip(*(layer_at(i, trial[i]) for i in range(n_layers)))
             cands.append((l, IntMLP(list(ws), list(bs), list(activations),
                                     q_star)))
-        if engine == "batched":
+        if multi:
+            has = _mean_ha([m for _, m in cands], engine, evaluators, xs, ys)
+        elif engine == "batched":
             has = list(evaluator.evaluate([m for _, m in cands]))
         else:
             has = [hardware_accuracy(m, x_val_int, y_val)

@@ -7,10 +7,14 @@ The production engine (DESIGN.md 13).  ``ServeEngine`` replaces the seed's
 * a slot-based paged KV cache (:class:`repro.runtime.kvcache.PagedKVCache`):
   fixed ``max_batch`` x ``max_context`` capacity, per-slot position
   counters, slot reuse the moment a request finishes — no whole-batch
-  ``_pad_kv`` re-padding;
-* decoupled prefill / decode dispatches with CHUNKED prefill: at most one
-  prompt chunk is ingested per engine step, so a long prompt never stalls
-  the resident decode batch, and finished slots refill mid-stream;
+  ``_pad_kv`` re-padding; with ``kv_block_size > 0`` the cache is BLOCK
+  PAGED (fixed-size blocks + per-slot block tables, DESIGN.md 15) and both
+  dispatches route attention through the block-table gather;
+* decoupled prefill / decode dispatches with BATCHED CHUNKED prefill: up to
+  ``prefill_batch`` chunks from DIFFERENT prefilling slots are ingested per
+  engine step in one fixed-shape (P, chunk) dispatch, so a long prompt
+  never stalls the resident decode batch, the oldest prompt never
+  head-of-line-blocks the rest, and finished slots refill mid-stream;
 * a request queue with admission control (reject/truncate prompts beyond
   ``max_context``, per-request queue deadlines, FIFO by arrival) and
   per-request latency stats (queue_s, prefill_s, first_token_s, decode
@@ -50,6 +54,10 @@ class Request:
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 32
     deadline_s: float | None = None   # max queue wait before expiry
+    # streaming callback: on_token(rid, step, token) fires the moment each
+    # generated token lands (step = 0-based index into the final
+    # ``out_tokens``), in both ServeEngine and ReferenceEngine
+    on_token: object = None
     out_tokens: list = field(default_factory=list)
     done: bool = False
     # lifecycle: new -> queued -> running -> done | rejected | expired
@@ -115,13 +123,22 @@ class ServeEngine:
                  max_context: int = 512, eos_id: int = 0,
                  quantized: bool = False, quant_bits=8,
                  temperature: float = 0.0, seed: int = 0,
-                 prefill_chunk: int = 64, admission: str = "reject",
+                 prefill_chunk: int = 64, prefill_batch: int = 1,
+                 kv_block_size: int = 0, kv_gather: str = "take",
+                 admission: str = "reject",
                  data_parallel: bool = False, mesh=None,
                  clock=time.monotonic):
         if cfg.family not in ("dense", "moe"):
             raise NotImplementedError(
                 f"paged serving supports standard-KV families, not "
                 f"{cfg.family!r} — use ReferenceEngine")
+        if data_parallel and kv_block_size:
+            raise ValueError(
+                "data_parallel decode shards contiguous slot rows; it does "
+                "not compose with kv_block_size > 0 (the block pool is a "
+                "global-index namespace)")
+        if kv_gather not in ("take", "pallas"):
+            raise ValueError(f"unknown kv_gather {kv_gather!r}")
         self.cfg = cfg
         self.model = Model(cfg)
         self.max_batch = max_batch
@@ -130,6 +147,9 @@ class ServeEngine:
         self.temperature = temperature
         self.admission = admission
         self.prefill_chunk = min(prefill_chunk, max_context)
+        self.prefill_batch = max(1, min(prefill_batch, max_batch))
+        self.kv_block_size = kv_block_size
+        self.kv_gather = kv_gather
         self.clock = clock
         self._key = jax.random.PRNGKey(seed)
         dt = jnp.dtype(cfg.dtype)
@@ -151,11 +171,20 @@ class ServeEngine:
             self.quant_bytes = None
             self.serving_sheet = None
             deq = lambda t: t                                   # noqa: E731
-        self.cache = PagedKVCache(self.model, max_batch, max_context)
+        self.cache = PagedKVCache(self.model, max_batch, max_context,
+                                  block_size=kv_block_size)
         self._decode = self._build_decode(deq, data_parallel, mesh)
-        self._prefill = jax.jit(
-            lambda pt, cache, tok, slot, off, n: self.model.prefill_chunk(
-                deq(pt), cache, tok, slot, off, n))
+        if kv_block_size:
+            self._prefill = jax.jit(
+                lambda pt, cache, tok, slots, offs, nv, tbl:
+                self.model.prefill_chunks(deq(pt), cache, tok, slots, offs,
+                                          nv, block_table=tbl,
+                                          kv_gather=kv_gather))
+        else:
+            self._prefill = jax.jit(
+                lambda pt, cache, tok, slots, offs, nv:
+                self.model.prefill_chunks(deq(pt), cache, tok, slots, offs,
+                                          nv))
         self._draw = jax.jit(jax.vmap(self._draw_one))
         self.queue: deque = deque()        # FIFO admitted requests
         self.slots: dict = {}              # slot id -> _Slot
@@ -164,12 +193,19 @@ class ServeEngine:
         self._seq = 0
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0,
                       "prefill_s": 0.0, "decode_s": 0.0,
-                      "prefill_chunks": 0, "decode_steps": 0, "steps": 0,
+                      "prefill_chunks": 0, "prefill_dispatches": 0,
+                      "decode_steps": 0, "steps": 0,
                       "admitted": 0, "rejected": 0, "truncated": 0,
                       "expired": 0, "finished": 0}
 
     # ------------------------------------------------------------ dispatches
     def _build_decode(self, deq, data_parallel: bool, mesh):
+        if self.kv_block_size:
+            return jax.jit(
+                lambda pt, cache, tok, pos, tbl: self.model.decode_step(
+                    deq(pt), cache, tok, pos, block_table=tbl,
+                    kv_gather=self.kv_gather))
+
         def step(pt, cache, tok, pos):
             return self.model.decode_step(deq(pt), cache, tok, pos)
 
@@ -248,8 +284,9 @@ class ServeEngine:
 
     # ------------------------------------------------------------ main loop
     def step(self, now=None) -> list:
-        """One scheduling iteration: expire -> refill slots -> one prefill
-        chunk -> one decode step over every decoding slot.  Returns requests
+        """One scheduling iteration: expire -> refill slots -> one batched
+        prefill dispatch (up to ``prefill_batch`` chunks) -> one decode step
+        over every decoding slot.  Returns requests
         finished this step.  ``now`` injects the caller's timebase: every
         timestamp this step records (expiry, queue_s, first_token_s,
         total_s) then comes from it, never from ``self.clock``."""
@@ -299,49 +336,80 @@ class ServeEngine:
             self._seq += 1
             self.events.append((self._step_idx, "assign", r.rid, slot))
 
+    def _emit(self, r):
+        """Fire the streaming callback for the token just appended."""
+        if r.on_token is not None:
+            r.on_token(r.rid, len(r.out_tokens) - 1, r.out_tokens[-1])
+
     def _prefill_step(self, now):
-        """Ingest ONE chunk of the oldest still-prefilling prompt."""
-        pending = [(st.seq, slot) for slot, st in self.slots.items()
-                   if st.phase == "prefill"]
+        """Ingest up to ``prefill_batch`` chunks from DIFFERENT prefilling
+        slots in ONE fixed-shape (P, chunk) dispatch, oldest assignment
+        first.  Unused rows ride along exactly like the decode dispatch's
+        dummy rows: offset = max_context puts every one of their scatter
+        writes out of range (``mode="drop"``) and their logits are ignored.
+        The scatter semantics also retire the old final-chunk host-side
+        shrink — an out-of-range position simply vanishes instead of
+        clamping, so ONE (P, chunk) shape compiles, ever."""
+        pending = sorted((st.seq, slot) for slot, st in self.slots.items()
+                         if st.phase == "prefill")
         if not pending:
             return
-        _, slot = min(pending)
-        st = self.slots[slot]
-        r = st.req
-        # shrink the final chunk so its fixed window never crosses the end
-        # of the slot: with offset + chunk > max_context the
-        # dynamic_update_slice start index would clamp and shift the write
-        # over earlier prompt KV.  Offsets are multiples of prefill_chunk,
-        # so at most one extra shape (max_context % prefill_chunk) compiles.
-        chunk = min(self.prefill_chunk, self.max_context - st.n_prefilled)
-        n = min(chunk, len(r.prompt) - st.n_prefilled)
-        toks = np.zeros((1, chunk), np.int32)
-        toks[0, :n] = r.prompt[st.n_prefilled:st.n_prefilled + n]
+        picked = [slot for _, slot in pending[:self.prefill_batch]]
+        P, chunk = self.prefill_batch, self.prefill_chunk
+        toks = np.zeros((P, chunk), np.int32)
+        slots = np.zeros(P, np.int32)
+        offs = np.full(P, self.max_context, np.int32)   # dummies: all-drop
+        nval = np.ones(P, np.int32)
+        ns = []
+        for i, slot in enumerate(picked):
+            st = self.slots[slot]
+            r = st.req
+            n = min(chunk, len(r.prompt) - st.n_prefilled)
+            toks[i, :n] = r.prompt[st.n_prefilled:st.n_prefilled + n]
+            slots[i], offs[i], nval[i] = slot, st.n_prefilled, n
+            ns.append(n)
+            if self.kv_block_size:
+                self.cache.ensure(slot, st.n_prefilled + n)
         t0 = time.time()
-        logits, self.cache.data = self._prefill(
-            self.params, self.cache.data, jnp.asarray(toks),
-            jnp.int32(slot), jnp.int32(st.n_prefilled), jnp.int32(n))
+        args = (self.params, self.cache.data, jnp.asarray(toks),
+                jnp.asarray(slots), jnp.asarray(offs), jnp.asarray(nval))
+        if self.kv_block_size:
+            args += (jnp.asarray(self.cache.block_table),)
+        logits, self.cache.data = self._prefill(*args)
         logits = np.asarray(logits)
         dt = time.time() - t0
         self.stats["prefill_s"] += dt
-        self.stats["prefill_tokens"] += n
-        self.stats["prefill_chunks"] += 1
-        r.stats["prefill_s"] = r.stats.get("prefill_s", 0.0) + dt
-        st.n_prefilled += n
-        self.cache.lengths[slot] = st.n_prefilled
-        if st.n_prefilled < len(r.prompt):
+        self.stats["prefill_tokens"] += int(sum(ns))
+        self.stats["prefill_chunks"] += len(picked)
+        self.stats["prefill_dispatches"] += 1
+        done_rows = []
+        for i, slot in enumerate(picked):
+            st = self.slots[slot]
+            st.req.stats["prefill_s"] = \
+                st.req.stats.get("prefill_s", 0.0) + dt
+            st.n_prefilled += ns[i]
+            self.cache.lengths[slot] = st.n_prefilled
+            if st.n_prefilled >= len(st.req.prompt):
+                done_rows.append((i, slot))
+        if not done_rows:
             return
-        # prompt fully ingested: sample the first token from the chunk's
-        # last-position logits (token index 0; EOS is deliberately NOT
+        # prompts fully ingested: sample their first tokens from the rows'
+        # last-valid-position logits (token index 0; EOS is deliberately NOT
         # checked here — the reference engine ignores a first-token EOS and
         # parity pins that behavior)
-        tok = int(self._sample(logits, np.array([r.rid]), np.array([0]))[0])
-        r.out_tokens.append(tok)
+        rows = np.array([i for i, _ in done_rows])
+        rids = np.array([self.slots[s].req.rid for _, s in done_rows])
+        nxt = self._sample(logits[rows], rids, np.zeros(len(rows), np.int64))
         t_first = self._now(now)
-        r.stats["first_token_s"] = t_first - r.arrival_s
-        st.phase = "decode"
-        if len(r.out_tokens) >= r.stats["max_new_eff"]:
-            self._finish(slot, t_first)
+        for j, (i, slot) in enumerate(done_rows):
+            st = self.slots[slot]
+            r = st.req
+            r.out_tokens.append(int(nxt[j]))
+            self._emit(r)
+            r.stats["first_token_s"] = t_first - r.arrival_s
+            st.phase = "decode"
+            if len(r.out_tokens) >= r.stats["max_new_eff"]:
+                self._finish(slot, t_first)
 
     def _decode_step(self, now):
         """One decode token for EVERY decoding slot in a single fixed-shape
@@ -363,10 +431,15 @@ class ServeEngine:
             pos[slot] = self.cache.lengths[slot]
             rids[slot] = r.rid
             steps[slot] = len(r.out_tokens)
+            if self.kv_block_size:
+                # the fed token's KV lands at position lengths[slot]
+                self.cache.ensure(slot, int(self.cache.lengths[slot]) + 1)
+        args = (self.params, self.cache.data, jnp.asarray(toks),
+                jnp.asarray(pos, jnp.int32))
+        if self.kv_block_size:
+            args += (jnp.asarray(self.cache.block_table),)
         t0 = time.time()
-        lg, self.cache.data = self._decode(
-            self.params, self.cache.data, jnp.asarray(toks),
-            jnp.asarray(pos, jnp.int32))
+        lg, self.cache.data = self._decode(*args)
         lg = np.asarray(lg)[:, 0]
         dt = time.time() - t0
         self.stats["decode_s"] += dt
@@ -381,6 +454,7 @@ class ServeEngine:
             self.cache.lengths[slot] += 1     # the fed token's KV was written
             tok = int(nxt[slot])
             r.out_tokens.append(tok)
+            self._emit(r)
             r.stats["decode_tokens"] = r.stats.get("decode_tokens", 0) + 1
             r.stats["decode_s"] = r.stats.get("decode_s", 0.0) + dt
             if tok == self.eos_id or \
@@ -495,6 +569,8 @@ class ReferenceEngine:
         last = self._sample(np.asarray(logits)[:, -1])
         for i, r in enumerate(batch):
             r.out_tokens.append(int(last[i]))
+            if r.on_token is not None:
+                r.on_token(r.rid, len(r.out_tokens) - 1, r.out_tokens[-1])
         max_new = max(min(r.max_new_tokens, self.max_context + 1 - S)
                       for r in batch)
         t0 = time.time()
@@ -509,6 +585,8 @@ class ReferenceEngine:
                 if not r.done and len(r.out_tokens) < r.max_new_tokens:
                     tok = int(last[i])
                     r.out_tokens.append(tok)
+                    if r.on_token is not None:
+                        r.on_token(r.rid, len(r.out_tokens) - 1, tok)
                     if tok == self.eos_id:
                         r.done = True
             if all(r.done or len(r.out_tokens) >= r.max_new_tokens

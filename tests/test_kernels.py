@@ -206,3 +206,30 @@ def test_linear_scan_vs_ref(B, S, W):
     np.testing.assert_allclose(np.asarray(linear_scan(a, x, bt=32, bw=64)),
                                np.asarray(linear_scan_ref(a, x)),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,nb,bs,H,D", [(3, 3, 4, 2, 8), (1, 2, 8, 1, 4),
+                                         (4, 1, 16, 2, 4)])
+def test_paged_gather_vs_take(B, nb, bs, H, D):
+    """Scalar-prefetch block-table gather (interpret mode) == the jnp.take
+    reference route, including out-of-range-HIGH sentinel entries (both
+    routes clamp to the last physical block; the garbage those rows carry
+    is masked downstream by position masks — bit-equality here is on the
+    raw gathered rows)."""
+    from repro.kernels import paged_gather
+    from repro.nn.layers import gather_block_rows
+    rng = np.random.default_rng(7)
+    NB = 2 * B * nb + 1
+    leaf = jnp.asarray(rng.normal(0, 1, (NB, bs, H, D)), jnp.float32)
+    table = rng.permutation(NB)[:B * nb].astype(np.int32).reshape(B, nb)
+    table[0, -1] = NB                       # unallocated-block sentinel
+    out = paged_gather(leaf, jnp.asarray(table), interpret=True)
+    ref = jnp.take(leaf, jnp.minimum(jnp.asarray(table), NB - 1),
+                   axis=0)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref))
+    # and the model-side wrapper reshapes to logical rows on both routes
+    a = gather_block_rows(leaf, jnp.asarray(table), engine="take")
+    assert a.shape == (B, nb * bs, H, D)
+    np.testing.assert_array_equal(np.asarray(a),
+                                  np.asarray(ref).reshape(B, nb * bs, H, D))

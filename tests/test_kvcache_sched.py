@@ -8,8 +8,9 @@ import numpy as np
 import pytest
 
 from repro.runtime.kvcache import (ADMIT_OK, ADMIT_REJECT, ADMIT_TRUNCATE,
-                                   PagedKVCache, admit, assign_slots, expire,
-                                   simulate)
+                                   PagedKVCache, admit, alloc_blocks,
+                                   assign_slots, blocks_needed, expire,
+                                   free_blocks, simulate)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -66,6 +67,117 @@ def test_paged_cache_alloc_release_reuse():
     c.release(1)
     with pytest.raises(AssertionError):
         c.release(1)                              # double release
+
+
+# ------------------------------------------- unit: block pool (DESIGN.md 15)
+
+def test_blocks_needed_ceil():
+    assert blocks_needed(0, 4) == 0
+    assert blocks_needed(1, 4) == 1
+    assert blocks_needed(4, 4) == 1
+    assert blocks_needed(5, 4) == 2
+
+
+def test_alloc_free_blocks_pure():
+    granted, free = alloc_blocks([5, 1, 3], 2)
+    assert granted == [1, 3] and free == [5]      # lowest-numbered first
+    with pytest.raises(RuntimeError, match="exhausted"):
+        alloc_blocks(free, 2)                     # clean failure, no grant
+    free = free_blocks(free, granted)
+    assert free == [1, 3, 5]                      # conservation
+    with pytest.raises(AssertionError):
+        free_blocks(free, [3])                    # already free
+    with pytest.raises(AssertionError):
+        free_blocks([], [2, 2])                   # returned twice
+
+
+def test_paged_cache_block_lifecycle():
+    with pytest.raises(ValueError, match="multiple"):
+        PagedKVCache(_FakeModel(), 2, 10, block_size=4)
+    c = PagedKVCache(_FakeModel(), 2, 8, block_size=4)
+    # pool sized so a full engine can never run short
+    assert c.n_blocks == 4 and c.data["k"].shape == (2, 4, 4, 1, 4)
+    assert (c.block_table == c.n_blocks).all()    # high sentinel, never -1
+    s = c.alloc(7)
+    assert c.ensure(s, 3) and c.held_blocks(s) == [0]
+    assert not c.ensure(s, 4)                     # 4 positions still 1 block
+    assert c.ensure(s, 5) and c.held_blocks(s) == [0, 1]
+    assert c.n_free_blocks == 2
+    s2 = c.alloc(8)
+    c._free_blocks = []                           # hand-shrunk pool
+    with pytest.raises(RuntimeError, match="exhausted"):
+        c.ensure(s2, 1)                           # a grant must fail loudly
+    assert c.held_blocks(s2) == []                # failed grant left nothing
+    c._free_blocks = [2, 3]
+    c.ensure(s2, 8)
+    assert c.held_blocks(s2) == [2, 3] and c.n_free_blocks == 0
+    c.release(s2)                                 # returns BOTH its blocks
+    assert c.n_free_blocks == 2 and (c.block_table[s2] == c.n_blocks).all()
+    c.release(s)
+    assert sorted(c._free_blocks) == [0, 1, 2, 3]
+
+
+def _block_cache_fuzz(seed):
+    """Random alloc/ensure/release storm on a block-mode cache: no physical
+    block is ever held by two slots, free + held is always the whole pool,
+    release returns every granted block, exhaustion raises cleanly."""
+    rng = np.random.default_rng(seed)
+    n_slots, bs = int(rng.integers(2, 5)), int(rng.integers(1, 4)) * 2
+    ctx = bs * int(rng.integers(1, 4))
+    c = PagedKVCache(_FakeModel(), n_slots, ctx, block_size=bs)
+    # hand-shrink the pool so exhaustion is reachable
+    c._free_blocks = c._free_blocks[:max(1, c.n_blocks - bs)]
+    pool = set(c._free_blocks)
+    live: dict = {}
+    for step in range(60):
+        op = rng.random()
+        if op < 0.4 and c.n_free:                   # admit
+            slot = c.alloc(step)
+            live[slot] = 0
+        elif op < 0.8 and live:                     # grow a random slot
+            slot = int(rng.choice(list(live)))
+            want = min(ctx, live[slot] + int(rng.integers(1, bs + 2)))
+            try:
+                c.ensure(slot, want)
+                live[slot] = want
+            except RuntimeError:
+                assert blocks_needed(want, bs) - len(c.held_blocks(slot)) \
+                    > c.n_free_blocks              # only fails when short
+        elif live:                                  # release
+            slot = int(rng.choice(list(live)))
+            c.release(slot)
+            assert (c.block_table[slot] == c.n_blocks).all()
+            del live[slot]
+        held = [b for s in live for b in c.held_blocks(s)]
+        assert len(held) == len(set(held)), "block double-booked"
+        assert set(c._free_blocks) | set(held) == pool, "blocks leaked"
+        assert not set(c._free_blocks) & set(held)
+    for slot in list(live):
+        c.release(slot)
+    assert set(c._free_blocks) == pool              # full conservation
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_block_cache_fuzz_seeded(seed):
+    _block_cache_fuzz(3000 + seed)
+
+
+def test_simulate_block_scarcity_head_waits():
+    """Scarce pool: the head of the queue that cannot get its blocks WAITS
+    (assignment stops for the step) instead of being skipped by a smaller
+    later request — starvation-free under block pressure."""
+    # 2 slots, 3 blocks; rid 0 takes 2 blocks and never finishes; rid 1
+    # needs 2 (can't fit), rid 2 needs 1 (could fit, must not jump the line)
+    log = simulate([(0, 0), (1, 1), (1, 2)], {}, 2, n_blocks=3,
+                   blocks_of={0: 2, 1: 2, 2: 1}, horizon=8)
+    assigned = [rid for _, a, rid, _ in log if a == "assign"]
+    assert assigned == [0]
+    # once rid 0 releases (t=3; blocks usable the step after, matching the
+    # slot rule), FIFO resumes: rid 1 then rid 2 get their blocks
+    log = simulate([(0, 0), (1, 1), (1, 2)], {0: 3}, 2, n_blocks=3,
+                   blocks_of={0: 2, 1: 2, 2: 1}, horizon=8)
+    assert [(rid, t) for t, a, rid, _ in log if a == "assign"] == \
+        [(0, 0), (1, 4), (2, 4)]
 
 
 # ----------------------------------------------- properties of the oracle
@@ -253,7 +365,7 @@ def _fuzz_trace(rng, max_context=12):
     return trace, policy, int(rng.integers(1, 3))
 
 
-def _check_engine_oracle_fuzz(fuzz_model, seed):
+def _check_engine_oracle_fuzz(fuzz_model, seed, kv_block_size=0):
     """Drive the live engine on an integer step clock (submit with now=t
     just before step(now=t), so engine step index == oracle time) and
     replay the admitted arrivals + observed finishes through `simulate`:
@@ -266,7 +378,8 @@ def _check_engine_oracle_fuzz(fuzz_model, seed):
     rng = np.random.default_rng(seed)
     trace, policy, max_batch = _fuzz_trace(rng)
     eng = ServeEngine(cfg, params, max_batch=max_batch, max_context=12,
-                      eos_id=-1, prefill_chunk=5, admission=policy)
+                      eos_id=-1, prefill_chunk=5, admission=policy,
+                      kv_block_size=kv_block_size)
     by_t = {}
     for it in trace:
         by_t.setdefault(it["t"], []).append(it)
@@ -302,11 +415,24 @@ def _check_engine_oracle_fuzz(fuzz_model, seed):
     _check_no_double_booking(
         [(s, a, rid, sl) for s, a, rid, sl in eng.events
          if a in ("assign", "release")], eng.max_batch)
+    if kv_block_size:
+        # block pool fully conserved after the trace drains, every table
+        # row back to the sentinel — release returned every granted block
+        assert eng.cache.n_free_blocks == eng.cache.n_blocks
+        assert (eng.cache.block_table == eng.cache.n_blocks).all()
 
 
 @pytest.mark.parametrize("seed", range(4))
 def test_engine_oracle_fuzz_seeded(fuzz_model, seed):
     _check_engine_oracle_fuzz(fuzz_model, 1000 + seed)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_engine_oracle_fuzz_block_paged(fuzz_model, seed):
+    """The block-paged engine's pool can never run short (pool = slots x
+    blocks_per_slot), so its scheduling decisions must coincide with the
+    slot-only oracle too — plus full block conservation after the drain."""
+    _check_engine_oracle_fuzz(fuzz_model, 2000 + seed, kv_block_size=4)
 
 
 if HAVE_HYPOTHESIS:

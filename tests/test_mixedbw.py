@@ -422,3 +422,64 @@ def test_explore_weight_bytes_axis():
     assert front                       # non-empty, sorted by cost ascending
     costs = [p.weight_bytes for p in front]
     assert costs == sorted(costs)
+
+
+# ------------------------------------------- calibration-set scoring (15)
+
+def test_mixed_bitwidth_calibration_set_parity(toy_tree):
+    """A SEQUENCE of eval batches means mean scoring — and the serial and
+    batched engines must still make bit-identical decisions, because each
+    per-batch score is computed by the same parity-exact path and the mean
+    is taken over the same ordering.  A singleton calibration set must
+    reproduce the plain single-eval_fn search exactly."""
+    params, eval_fn = toy_tree
+
+    def eval2(p):
+        # second calibration batch: reweighted integer-valued loss
+        return (2.0 * jnp.sum(jnp.round(jnp.abs(p["wq"]) * 256.0))
+                + 6.0 * jnp.sum(jnp.round(jnp.abs(p["wk"]) * 256.0))
+                + jnp.sum(jnp.round(jnp.abs(p["wv"]) * 256.0)))
+
+    for budget in (0.01, 0.05):
+        rs = mixed_bitwidth_search(params, [eval_fn, eval2], budget=budget,
+                                   engine="serial")
+        rb = mixed_bitwidth_search(params, [eval_fn, eval2], budget=budget,
+                                   engine="batched")
+        assert (rs.bits, rs.start_bits, rs.history) == \
+            (rb.bits, rb.start_bits, rb.history), budget
+    r1 = mixed_bitwidth_search(params, [eval_fn], budget=0.05,
+                               engine="batched")
+    r0 = mixed_bitwidth_search(params, eval_fn, budget=0.05,
+                               engine="batched")
+    assert (r1.bits, r1.start_bits, r1.history) == \
+        (r0.bits, r0.start_bits, r0.history)
+
+
+def test_mixed_minq_calibration_set_parity_pendigits():
+    """Integer-pipeline adapter: a calibration set (two validation halves)
+    scores every rung by MEAN hardware accuracy, and serial vs batched
+    engines stay bit-identical on the pendigits pipeline."""
+    from repro.core import quantize_inputs
+    from repro.data import pendigits
+    from repro.train.zaal import TrainConfig, train
+
+    ds = pendigits.load()
+    (xtr, ytr), (xval, yval) = ds.validation_split()
+    res = train(TrainConfig(structure=(16, 10, 10), epochs=5, seed=3),
+                pendigits.to_unit(xtr), ytr,
+                pendigits.to_unit(xval), yval)
+    xvi = quantize_inputs(pendigits.to_unit(xval))
+    h = len(xvi) // 2
+    xs, ys = [xvi[:h], xvi[h:]], [yval[:h], yval[h:]]
+    rs = mixed_minq_search(res.weights, res.biases, ACTS, xs, ys,
+                           engine="serial")
+    rb = mixed_minq_search(res.weights, res.biases, ACTS, xs, ys,
+                           engine="batched")
+    assert (rs.qs, rs.ha, rs.q_star, rs.history) == \
+        (rb.qs, rb.ha, rb.q_star, rb.history)
+    for ws, wb in zip(rs.mlp.weights, rb.mlp.weights):
+        np.testing.assert_array_equal(ws, wb)
+    # the reported score IS the mean over the calibration batches
+    from repro.core.intmlp import hardware_accuracy
+    assert rb.ha == pytest.approx(np.mean(
+        [hardware_accuracy(rb.mlp, x, y) for x, y in zip(xs, ys)]))

@@ -399,3 +399,91 @@ def test_data_parallel_decode_parity():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "DP-OK" in out.stdout and "DIV-GUARD-OK" in out.stdout
+
+
+# --------------------------------- block-paged KV + batched prefill (PR 8)
+
+def test_parity_mixed_lengths_multiblock_batched_prefill(lm32):
+    """The acceptance case: mixed prompt lengths, a chunk size that divides
+    none of them, contexts spanning several KV blocks, and batched
+    multi-chunk prefill — greedy outputs must be bit-identical to the
+    reference engine (max_batch=1: no left-padding on either side)."""
+    cfg, m, params = lm32
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, cfg.vocab, n) for n in (3, 17, 9, 22, 5)]
+    _, ref = _serve(cfg, params, prompts, engine="reference",
+                    max_batch=1, max_context=32)
+    _, new = _serve(cfg, params, prompts, engine="paged",
+                    max_batch=3, max_context=32, prefill_chunk=5,
+                    prefill_batch=3, kv_block_size=8)
+    assert [r.out_tokens for r in new] == [r.out_tokens for r in ref]
+
+
+def test_block_paged_matches_contiguous(lm32):
+    """kv_block_size is a memory-layout knob, not a numerics knob: the
+    block-table gather path (both the jnp.take reference route and the
+    Pallas scalar-prefetch kernel in interpret mode) must reproduce the
+    contiguous engine's greedy tokens exactly, and the run must hand every
+    block back to the pool."""
+    cfg, m, params = lm32
+    rng = np.random.default_rng(22)
+    prompts = [rng.integers(0, cfg.vocab, n) for n in (13, 4, 19, 7)]
+    _, contig = _serve(cfg, params, prompts, max_batch=2, max_context=32,
+                       prefill_chunk=6)
+    want = [r.out_tokens for r in contig]
+    for gather in ("take", "pallas"):
+        eng = ServeEngine(cfg, params, eos_id=-1, max_batch=2,
+                          max_context=32, prefill_chunk=6,
+                          kv_block_size=8, kv_gather=gather)
+        reqs = _reqs(prompts, max_new=6)
+        eng.run(reqs)
+        assert [r.out_tokens for r in reqs] == want, gather
+        assert eng.cache.n_free_blocks == eng.cache.n_blocks, gather
+        assert (eng.cache.block_table == eng.cache.n_blocks).all(), gather
+
+
+def test_prefill_batch_invariance(lm32):
+    """prefill_batch is a scheduling knob: ingesting 1, 2 or 4 chunks per
+    engine step must not change any request's greedy tokens (idle rows in
+    the batched dispatch write at the drop sentinel and read nothing)."""
+    cfg, m, params = lm32
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(0, cfg.vocab, n) for n in (11, 3, 16, 8, 6)]
+    outs = []
+    for pb in (1, 2, 4):
+        _, reqs = _serve(cfg, params, prompts, max_batch=4, max_context=32,
+                         prefill_chunk=5, prefill_batch=pb)
+        outs.append([r.out_tokens for r in reqs])
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_on_token_streaming_order(lm32):
+    """Request.on_token streams every generated token in order, for both
+    engines: per request the callback sees steps 0..n-1 exactly once, in
+    order, and the streamed tokens equal the final out_tokens."""
+    cfg, m, params = lm32
+    rng = np.random.default_rng(24)
+    prompts = [rng.integers(0, cfg.vocab, n) for n in (4, 9, 6)]
+    for engine, kw in (("paged", dict(max_batch=2, max_context=32,
+                                      prefill_chunk=4, prefill_batch=2)),
+                       ("reference", dict(max_batch=2, max_context=32))):
+        cls = ServeEngine if engine == "paged" else ReferenceEngine
+        seen = {i: [] for i in range(len(prompts))}
+        eng = cls(cfg, params, eos_id=-1, **kw)
+        reqs = _reqs(prompts, max_new=6,
+                     on_token=lambda rid, step, tok: seen[rid].append(
+                         (step, tok)))
+        eng.run(reqs)
+        for r in reqs:
+            assert [s for s, _ in seen[r.rid]] == list(
+                range(len(r.out_tokens))), engine
+            assert [t for _, t in seen[r.rid]] == r.out_tokens, engine
+
+
+def test_data_parallel_block_paged_raises(lm32):
+    """shard_map decode is contiguous-only: block paging + data_parallel is
+    an explicit configuration error, not silent fallback."""
+    cfg, m, params = lm32
+    with pytest.raises(ValueError, match="block"):
+        ServeEngine(cfg, params, max_batch=2, max_context=32,
+                    kv_block_size=8, data_parallel=True)
