@@ -7,7 +7,10 @@ For each artifact the working-tree copy is the CANDIDATE and
 identity fields (every non-numeric lane key: ``quant``, ``rate_rps``,
 ``prefill_batch``, ``lane``, ...) and every shared numeric metric is
 printed as ``baseline -> candidate (delta, pct)``.  The tool is
-REPORT-ONLY: it always exits 0.  Guard rails, not gates —
+REPORT-ONLY: it always exits 0.  Guard rails, not gates — unless ``--fail-threshold PCT`` is passed, which
+turns p99 latency regressions beyond PCT percent into a non-zero exit (the
+opt-in gate; CI runs it as a separate non-blocking step).  Other guard
+rails:
 
 * differing ``config_hash`` means the runs are not like-for-like; the
   file is skipped with a note instead of printing misleading deltas
@@ -41,7 +44,8 @@ def _load_baseline(path: str):
 # fields that NAME a lane rather than measure it; everything else numeric
 # is treated as a metric and diffed
 _IDENTITY = ("lane", "quant", "rate_rps", "prefill_batch", "kv_block_size",
-             "n_requests", "structure", "arch")
+             "kv_gather", "decode_kernel", "long_prompts", "n_requests",
+             "structure", "arch")
 
 
 def _lane_key(lane: dict):
@@ -58,23 +62,29 @@ def _fmt_key(key) -> str:
     return ",".join(f"{k}={v}" for k, v in key) or "<unkeyed>"
 
 
-def compare_file(path: str) -> list[str]:
+def compare_file(path: str,
+                 fail_threshold: float | None = None
+                 ) -> tuple[list[str], list[str]]:
+    """Report lines plus, when *fail_threshold* is set, the p99 latency
+    metrics that regressed (candidate worse than baseline) by more than
+    that many percent."""
+    failures: list[str] = []
     out = [f"== {path} =="]
     try:
         with open(path) as f:
             cand = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         out.append(f"  no candidate ({e.__class__.__name__}); skipping")
-        return out
+        return out, failures
     base = _load_baseline(path)
     if base is None:
         out.append("  no committed baseline at HEAD; nothing to compare")
-        return out
+        return out, failures
     bh, ch = base.get("config_hash"), cand.get("config_hash")
     if bh is not None and ch is not None and bh != ch:
         out.append(f"  config_hash differs (baseline {bh} vs candidate {ch});"
                    " runs are not like-for-like — skipping lane deltas")
-        return out
+        return out, failures
     if bh is None or ch is None:
         out.append("  note: config_hash missing on "
                    + ("both sides" if bh is None and ch is None else
@@ -98,15 +108,37 @@ def compare_file(path: str) -> list[str]:
             pct = f" ({d / b:+.1%})" if b else ""
             mark = "" if d == 0 else f"  {b:g} -> {c:g} ({d:+g}){pct}"
             out.append(f"    {m}: {c:g}" if not mark else f"    {m}:{mark}")
-    return out
+            if (fail_threshold is not None and "p99" in m and b > 0
+                    and d / b * 100.0 > fail_threshold):
+                failures.append(f"{path}: lane {_fmt_key(key)} {m} "
+                                f"{b:g} -> {c:g} ({d / b:+.1%} > "
+                                f"+{fail_threshold:g}%)")
+    return out, failures
 
 
 def main(argv=None) -> int:
-    paths = (argv if argv is not None else sys.argv[1:]) or \
-        ["BENCH_serve.json", "BENCH_mixedbw.json"]
-    for p in paths:
-        print("\n".join(compare_file(p)))
-    return 0          # report-only by design: never fails the build
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    default=["BENCH_serve.json", "BENCH_mixedbw.json"])
+    ap.add_argument("--fail-threshold", type=float, default=None,
+                    metavar="PCT",
+                    help="exit non-zero if any p99 latency metric regresses "
+                         "by more than PCT percent (default: report-only, "
+                         "always exit 0)")
+    args = ap.parse_args(argv)
+    all_failures: list[str] = []
+    for p in args.paths:
+        lines, failures = compare_file(p, args.fail_threshold)
+        print("\n".join(lines))
+        all_failures += failures
+    if all_failures:
+        print(f"\nFAIL: {len(all_failures)} p99 regression(s) beyond "
+              f"{args.fail_threshold:g}%:")
+        for f in all_failures:
+            print(f"  {f}")
+        return 1
+    return 0          # report-only by default: never fails the build
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
 from .ops import (csd_expand, csd_expand_stack, csd_matvec,  # noqa: F401
-                  csd_qsweep, paged_gather, qmatmul, quantize_pot)
+                  csd_qsweep, paged_attention, paged_gather, qmatmul,
+                  quantize_pot)
 from .flash_attention import flash_attention  # noqa: F401
 from .linear_scan import linear_scan  # noqa: F401

@@ -15,11 +15,13 @@ import numpy as np
 
 from . import ref
 from .csd_matvec import csd_matvec_kernel, csd_qsweep_kernel
+from .paged_attention import paged_attention_kernel
 from .paged_gather import paged_gather_kernel
 from .qmatmul import qmatmul_kernel
 
 __all__ = ["qmatmul", "csd_matvec", "csd_qsweep", "quantize_pot",
-           "csd_expand", "csd_expand_stack", "paged_gather"]
+           "csd_expand", "csd_expand_stack", "paged_gather",
+           "paged_attention"]
 
 
 def csd_expand(w_int, depth: int | None = None) -> np.ndarray:
@@ -139,3 +141,38 @@ def paged_gather(leaf, table, *, interpret: bool | None = None):
     NB = leaf.shape[0]
     tbl = jnp.minimum(table.astype(jnp.int32), NB - 1)
     return paged_gather_kernel(leaf, tbl, interpret=interpret)
+
+
+def paged_attention(q, k_pool, v_pool, table, cache_len, *,
+                    window: int = 0, interpret: bool | None = None):
+    """Fused block-paged decode attention (DESIGN.md 16): softmax(q K^T) V
+    computed straight from the (NB, bs, Hkv, D) block pool — the (B, nb)
+    block table rides in SMEM and drives each grid step's K/V DMA; no
+    gathered (B, nb*bs, ...) intermediate ever materializes.
+
+    Bit-identical to ``repro.nn.layers.paged_decode_attention_ref`` (the
+    lax.scan block-online-softmax reference) for ``cache_len >= 1``.
+
+    Sentinel entries >= NB clamp to NB - 1 (the ``jnp.take`` convention);
+    the clamped garbage is exactly masked because sentinel entries only
+    exist at logical blocks past ``cache_len``.  On top of the clamp, grid
+    steps past a slot's last needed block are remapped to re-index that
+    slot's LAST needed physical block: Pallas skips the DMA when two
+    consecutive grid steps read the same block, so HBM bytes read scale
+    with the ACTUAL per-slot lengths, not nb * bs — and the remap is
+    invisible to numerics (those steps are fully masked no-ops, and the
+    kernel ``pl.when``s their compute off anyway)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B = q.shape[0]
+    NB, bs = k_pool.shape[0], k_pool.shape[1]
+    nb = table.shape[1]
+    clen = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
+    clen = jnp.minimum(clen, nb * bs)
+    tbl = jnp.minimum(table.astype(jnp.int32), NB - 1)
+    last = jnp.maximum((clen - 1) // bs, 0)                   # (B,)
+    jidx = jnp.minimum(jnp.arange(nb)[None, :], last[:, None])
+    eff = jnp.take_along_axis(tbl, jidx, axis=1)
+    return paged_attention_kernel(q, k_pool, v_pool, eff, clen,
+                                  window=window, interpret=interpret)

@@ -5,7 +5,10 @@ paper's technique as a serving flag), serves a demo request batch through
 the admission queue, and reports per-request latency percentiles plus
 prefill/decode throughput.  ``--engine reference`` runs the retained
 continuous-batching-lite engine instead (any model family);
-``--data-parallel`` shards the decode step over every visible device.
+``--data-parallel`` shards the decode step over every visible device;
+``--tensor-parallel`` shards heads + FFN instead (works with block
+paging); ``--decode-kernel fused`` runs decode attention straight from
+the KV block pool via the fused Pallas kernel.
 """
 from __future__ import annotations
 
@@ -43,6 +46,15 @@ def main(argv=None):
     ap.add_argument("--kv-gather", choices=("take", "pallas"),
                     default="take",
                     help="block-table gather route (block-paged mode only)")
+    ap.add_argument("--decode-kernel",
+                    choices=("dense", "reference", "fused"),
+                    default="dense",
+                    help="decode attention route (block-paged mode only): "
+                         "gather+dense oracle, scan reference, or the "
+                         "fused Pallas paged-attention kernel")
+    ap.add_argument("--tensor-parallel", action="store_true",
+                    help="shard attention heads + FFN over all devices "
+                         "(composes with --kv-block-size)")
     ap.add_argument("--admission", choices=("reject", "truncate"),
                     default="truncate")
     ap.add_argument("--deadline", type=float, default=None,
@@ -73,8 +85,10 @@ def main(argv=None):
                           prefill_batch=args.prefill_batch,
                           kv_block_size=args.kv_block_size,
                           kv_gather=args.kv_gather,
+                          decode_kernel=args.decode_kernel,
                           admission=args.admission,
-                          data_parallel=args.data_parallel)
+                          data_parallel=args.data_parallel,
+                          tensor_parallel=args.tensor_parallel)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab, args.prompt_len)

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .layers import (chunked_attention, decode_attention, gather_block_rows,
-                     rms_norm, rope, swiglu)
+                     paged_decode_attention_ref, rms_norm, rope, swiglu)
 from .types import ArchConfig
 
 
@@ -100,7 +100,7 @@ def attention_seq(p, x, cfg: ArchConfig, *, positions=None, window: int = 0,
 
 def attention_step(p, x, cache, pos, cfg: ArchConfig, *, window: int = 0,
                    pin=None, pin_q=None, block_table=None,
-                   kv_gather: str = "take"):
+                   kv_gather: str = "take", decode_kernel: str = "dense"):
     """One decode token. cache: {k: (B,C,Hkv,D), v: ...}; pos: scalar int or
     a per-row (B,) vector (paged serving: every slot decodes at its own
     sequence position).
@@ -116,8 +116,14 @@ def attention_step(p, x, cache, pos, cfg: ArchConfig, *, window: int = 0,
     (B, nb) int32 map (logical block j of row b -> physical block).  The
     token's K/V is scattered at (table[b, pos // bs], pos % bs) with
     ``mode="drop"`` (sentinel NB entries and dummy rows vanish instead of
-    clamping), and attention reads the gathered logical rows — bit-identical
-    to the contiguous path because masked positions contribute exactly 0.
+    clamping), and attention reads the pool per ``decode_kernel``:
+    ``"dense"`` (default oracle) gathers the logical rows and runs the dense
+    masked pass; ``"reference"`` runs the lax.scan block-online-softmax
+    straight off the pool (no gathered copy); ``"fused"`` runs the Pallas
+    fused kernel (DESIGN.md 16) — bit-identical to ``"reference"``, allclose
+    to ``"dense"``, token streams identical in practice.  All three are
+    bit-identical to the contiguous path in masking semantics: garbage
+    positions contribute exactly 0.
     Requires per-row ``pos``; windows and pins are contiguous-only.
     """
     B = x.shape[0]
@@ -143,10 +149,19 @@ def attention_step(p, x, cache, pos, cfg: ArchConfig, *, window: int = 0,
             k[:, 0].astype(cache["k"].dtype), mode="drop")
         v_cache = cache["v"].at[phys, off].set(
             v[:, 0].astype(cache["v"].dtype), mode="drop")
-        krow = gather_block_rows(k_cache, block_table, engine=kv_gather)
-        vrow = gather_block_rows(v_cache, block_table, engine=kv_gather)
         cache_len = jnp.minimum(posv[:, 0] + 1, nb * bs)
-        out = decode_attention(q, krow, vrow, cache_len, window=0)
+        if decode_kernel == "dense":
+            krow = gather_block_rows(k_cache, block_table, engine=kv_gather)
+            vrow = gather_block_rows(v_cache, block_table, engine=kv_gather)
+            out = decode_attention(q, krow, vrow, cache_len, window=0)
+        elif decode_kernel == "reference":
+            out = paged_decode_attention_ref(q, k_cache, v_cache,
+                                             block_table, cache_len)
+        elif decode_kernel == "fused":
+            from repro.kernels import paged_attention
+            out = paged_attention(q, k_cache, v_cache, block_table, cache_len)
+        else:
+            raise ValueError(f"unknown decode_kernel {decode_kernel!r}")
         out = out.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
         return out, {"k": k_cache, "v": v_cache}
     C = cache["k"].shape[1]

@@ -245,6 +245,79 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
     return out.reshape(B, 1, Hq, D).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, table, cache_len, *,
+                               window: int = 0):
+    """Single-token attention straight from the block-paged KV pool.
+
+    q: (B, 1, Hq, D); pools: (NB, bs, Hkv, D); table: (B, nb) int32 block
+    table (entries may carry the out-of-range sentinel NB — clamped to
+    NB - 1 before the gather, and the garbage block that reads is fully
+    masked because sentinel entries only exist at logical blocks past
+    ``cache_len``); cache_len: scalar or (B,) valid length.
+
+    This is the ``lax.scan`` block-online-softmax reference for the fused
+    Pallas kernel (``repro.kernels.paged_attention``): one scan step per
+    logical block, carrying (running max, denominator, accumulator) in f32,
+    with EXACTLY the kernel's per-block arithmetic — grouped GQA einsum,
+    NEG_INF masking (whose exp underflows to exactly 0.0 in f32, so masked
+    blocks are exact no-ops and the kernel may skip them), same m/l/acc
+    update order.  The kernel reproduces this block-sequential reduction
+    bit-for-bit; vs the dense :func:`decode_attention` oracle the reduction
+    is re-associated, so parity there is allclose, not bitwise.
+
+    Unlike the gather+dense route (``gather_block_rows`` then
+    ``decode_attention``) no (B, nb*bs, Hkv, D) contiguous copy is ever
+    materialized — the pool is read once, per block.
+    """
+    from repro.kernels.paged_attention import LOG2E, pow2_int
+
+    B, _, Hq, D = q.shape
+    NB, bs, Hkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    nb = table.shape[1]
+    G = Hq // Hkv
+    scale = LOG2E / np.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    clen = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
+    tbl = jnp.minimum(table.astype(jnp.int32), NB - 1)        # (B, nb)
+    offs = jnp.arange(bs)
+
+    def block_step(carry, inp):
+        m, l, acc = carry
+        j, tcol = inp                                         # tcol: (B,)
+        kb = jnp.take(k_pool, tcol, axis=0)                   # (B,bs,Hkv,D)
+        vb = jnp.take(v_pool, tcol, axis=0)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        pos = j * bs + offs                                   # (bs,)
+        valid = pos[None, :] < clen[:, None]
+        if window:
+            valid &= pos[None, :] >= clen[:, None] - window
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        # Base-2 online softmax, integer-quantized running max: the rescale
+        # factor is an exact power of two (see pow2_int), so the carry
+        # updates never round on the multiply and XLA's FMA contraction —
+        # which it applies or skips differently per compilation — cannot
+        # perturb them.  This is what makes the fused kernel's reduction
+        # reproducible bit-for-bit against this scan.
+        m_new = jnp.maximum(m, jnp.ceil(s.max(axis=-1)))
+        p = jnp.exp2(s - m_new[..., None])
+        corr = pow2_int(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgk,bkhd->bhgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(block_step, (m0, l0, a0),
+                                  (jnp.arange(nb), tbl.T))
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # FFNs
 # ---------------------------------------------------------------------------

@@ -52,10 +52,22 @@ class Model:
     #: all-reduces into reduce-scatters and eliminate weight regathers
     #: (S Perf iteration 8).
     act_model_axis = None
+    #: mesh axis tensor-parallel DECODE shards heads/FFN columns over, or
+    #: None.  Set (with a head/d_ff-local cfg) by ServeEngine's shard_map
+    #: route: attention and FFN outputs are partial sums over the sharded
+    #: contraction dim and _tp_reduce psums them back (DESIGN.md 16.3).
+    tp_axis = None
 
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
         self.dtype = jnp.dtype(cfg.dtype)
+
+    def _tp_reduce(self, t):
+        """psum a tensor-parallel partial sum over tp_axis (identity when
+        decode is not head-sharded)."""
+        if self.tp_axis is None:
+            return t
+        return jax.lax.psum(t, self.tp_axis)
 
     def _pin_kv(self, t):
         """Pin a per-layer KV cache slice (B, S, H, D) to batch x seq
@@ -641,10 +653,12 @@ class Model:
             jnp.asarray(n_valid).reshape(1))
 
     def decode_step(self, params, cache, tokens, pos, block_table=None,
-                    kv_gather: str = "take"):
+                    kv_gather: str = "take", decode_kernel: str = "dense"):
         """One token for the whole batch. tokens: (B, 1); pos: scalar int32
         or a (B,) per-row position vector (paged serving).  ``block_table``
-        (dense/moe only) switches the KV leaves to the block-paged layout —
+        (dense/moe only) switches the KV leaves to the block-paged layout,
+        and ``decode_kernel`` picks the block-paged attention route
+        (dense gather+masked-pass oracle / scan reference / fused Pallas) —
         see :func:`repro.nn.blocks.attention_step`."""
         cfg = self.cfg
         hd = cfg.head_dim_
@@ -660,17 +674,18 @@ class Model:
                 hn = rms_norm(h, pl["ln1"].astype(h.dtype), cfg.norm_eps)
                 pins = (dict(pin=self._pin_kv, pin_q=self._pin_rep)
                         if block_table is None else
-                        dict(block_table=block_table, kv_gather=kv_gather))
+                        dict(block_table=block_table, kv_gather=kv_gather,
+                             decode_kernel=decode_kernel))
                 a, kv2 = blocks.attention_step(pl["attn"], hn, kv, pos, cfg,
                                                **pins)
-                h = h + a
+                h = h + self._tp_reduce(a)
                 hn = rms_norm(h, pl["ln2"].astype(h.dtype), cfg.norm_eps)
                 if cfg.n_experts:
                     y, _ = blocks.moe_apply(pl["moe"], hn, cfg,
                                             pins=self._moe_pins())
                 else:
                     y = blocks.mlp_apply(pl["mlp"], hn)
-                return h + y, kv2
+                return h + self._tp_reduce(y), kv2
             x, kvs = jax.lax.scan(
                 body, x, (params["layers"], {"k": cache["k"], "v": cache["v"]}),
                 unroll=_unroll(cfg.n_layers))

@@ -23,7 +23,20 @@ The production engine (DESIGN.md 13).  ``ServeEngine`` replaces the seed's
   (seed, rid, token index), so sampled streams are reproducible across runs
   AND across batch compositions;
 * optional ``shard_map`` data parallelism over the decode step (slots
-  sharded across mesh devices, params replicated — the eval-layer idiom).
+  sharded across mesh devices, params replicated — the eval-layer idiom)
+  OR tensor parallelism (``tensor_parallel=True``: heads / FFN columns
+  sharded, outputs psum-combined, DESIGN.md 16.3) — tensor parallelism
+  composes with block paging (the pool's head dim shards; the block-id
+  namespace stays global), so ``data_parallel + kv_block_size`` routes
+  there instead of raising;
+* a ``decode_kernel`` selector for the block-paged attention read:
+  ``"dense"`` (gather + masked full-row pass, the default oracle),
+  ``"reference"`` (lax.scan block-online-softmax straight off the pool),
+  ``"fused"`` (the Pallas fused kernel, DESIGN.md 16 — bytes read scale
+  with actual per-slot lengths);
+* in-place cache updates: both jitted dispatches DONATE the KV-cache
+  pytree (``donate_argnums``), so a decode step updates the pool's buffers
+  instead of allocating a second full-size copy.
 
 With ``quantized=True`` the matmul weights serve as int8-PoT (repro.quant);
 dequantization happens INSIDE the jitted dispatches so the resident bytes
@@ -116,6 +129,39 @@ class _Slot:
     seq: int = 0                  # assignment sequence (prefill FIFO order)
 
 
+#: decoder-layer leaves whose LAST dim is a head/FFN-column output
+#: (sharded over the tensor-parallel axis) and whose dim -2 is the sharded
+#: CONTRACTION dim of a row-parallel matmul (output is a psum-ed partial).
+_TP_COL = frozenset({"wq", "wk", "wv", "bq", "bk", "bv", "wg", "wu"})
+_TP_ROW = frozenset({"wo", "wd"})
+
+
+def _tp_param_specs(params, axis):
+    """Per-path PartitionSpecs for tensor-parallel decode.
+
+    Inside the stacked ``layers`` pytree: q/k/v projections, their biases,
+    and the FFN up/gate matrices shard their last (output-column) dim;
+    ``wo``/``wd`` shard dim -2 (the contraction dim — their outputs are
+    partial sums that ``Model._tp_reduce`` psums).  The name-based rule
+    covers every nesting level (attn, mlp, moe experts, moe shared/dense
+    residual MLPs); routers, norms, embeddings, and the LM head replicate.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def spec(path, leaf):
+        keys = [getattr(k, "key", None) for k in path]
+        if "layers" not in keys:
+            return P()
+        name = keys[-1]
+        if name in _TP_COL:
+            return P(*([None] * (leaf.ndim - 1)), axis)
+        if name in _TP_ROW:
+            return P(*([None] * (leaf.ndim - 2)), axis, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
 class ServeEngine:
     """Slot-paged serving engine for the standard-KV families (dense/moe)."""
 
@@ -125,20 +171,34 @@ class ServeEngine:
                  temperature: float = 0.0, seed: int = 0,
                  prefill_chunk: int = 64, prefill_batch: int = 1,
                  kv_block_size: int = 0, kv_gather: str = "take",
-                 admission: str = "reject",
-                 data_parallel: bool = False, mesh=None,
-                 clock=time.monotonic):
+                 decode_kernel: str = "dense", admission: str = "reject",
+                 data_parallel: bool = False, tensor_parallel: bool = False,
+                 mesh=None, clock=time.monotonic):
         if cfg.family not in ("dense", "moe"):
             raise NotImplementedError(
                 f"paged serving supports standard-KV families, not "
                 f"{cfg.family!r} — use ReferenceEngine")
-        if data_parallel and kv_block_size:
-            raise ValueError(
-                "data_parallel decode shards contiguous slot rows; it does "
-                "not compose with kv_block_size > 0 (the block pool is a "
-                "global-index namespace)")
         if kv_gather not in ("take", "pallas"):
             raise ValueError(f"unknown kv_gather {kv_gather!r}")
+        if decode_kernel not in ("dense", "reference", "fused"):
+            raise ValueError(f"unknown decode_kernel {decode_kernel!r}")
+        if decode_kernel != "dense" and not kv_block_size:
+            raise ValueError(
+                "decode_kernel='reference'/'fused' read the block pool "
+                "directly; they need kv_block_size > 0")
+        if data_parallel and tensor_parallel:
+            raise ValueError(
+                "pick ONE of data_parallel / tensor_parallel decode")
+        if tensor_parallel and quantized:
+            raise NotImplementedError(
+                "tensor-parallel decode serves float params (sharding the "
+                "per-channel PoT qtree is not wired)")
+        if data_parallel and kv_block_size:
+            # slot-sharded (data-parallel) decode cannot compose with the
+            # block pool: a per-shard slot row indexes the GLOBAL block-id
+            # namespace.  The sharded route that does compose shards HEADS
+            # (the pool's Hkv dim is layout-local), so route there.
+            data_parallel, tensor_parallel = False, True
         self.cfg = cfg
         self.model = Model(cfg)
         self.max_batch = max_batch
@@ -150,6 +210,8 @@ class ServeEngine:
         self.prefill_batch = max(1, min(prefill_batch, max_batch))
         self.kv_block_size = kv_block_size
         self.kv_gather = kv_gather
+        self.decode_kernel = decode_kernel
+        self.tensor_parallel = tensor_parallel
         self.clock = clock
         self._key = jax.random.PRNGKey(seed)
         dt = jnp.dtype(cfg.dtype)
@@ -173,18 +235,31 @@ class ServeEngine:
             deq = lambda t: t                                   # noqa: E731
         self.cache = PagedKVCache(self.model, max_batch, max_context,
                                   block_size=kv_block_size)
-        self._decode = self._build_decode(deq, data_parallel, mesh)
+        # analytic decode-attention KV traffic: bytes one logical cache row
+        # (K + V, every layer) occupies — priced per dispatch by
+        # _decode_kv_bytes into stats["kv_bytes_read"]
+        itemsize = jax.tree.leaves(self.cache.data)[0].dtype.itemsize
+        self._kv_row_bytes = (cfg.n_layers * cfg.n_kv_heads
+                              * cfg.head_dim_ * 2 * itemsize)
+        self._decode = self._build_decode(deq, data_parallel,
+                                          tensor_parallel, mesh)
+        # donate_argnums=(1,): the cache pytree is consumed by every
+        # dispatch and rebound to the returned one (self.cache.data = ...),
+        # so XLA updates the KV buffers in place instead of holding the old
+        # and new pool live at once
         if kv_block_size:
             self._prefill = jax.jit(
                 lambda pt, cache, tok, slots, offs, nv, tbl:
                 self.model.prefill_chunks(deq(pt), cache, tok, slots, offs,
                                           nv, block_table=tbl,
-                                          kv_gather=kv_gather))
+                                          kv_gather=kv_gather),
+                donate_argnums=(1,))
         else:
             self._prefill = jax.jit(
                 lambda pt, cache, tok, slots, offs, nv:
                 self.model.prefill_chunks(deq(pt), cache, tok, slots, offs,
-                                          nv))
+                                          nv),
+                donate_argnums=(1,))
         self._draw = jax.jit(jax.vmap(self._draw_one))
         self.queue: deque = deque()        # FIFO admitted requests
         self.slots: dict = {}              # slot id -> _Slot
@@ -196,21 +271,26 @@ class ServeEngine:
                       "prefill_chunks": 0, "prefill_dispatches": 0,
                       "decode_steps": 0, "steps": 0,
                       "admitted": 0, "rejected": 0, "truncated": 0,
-                      "expired": 0, "finished": 0}
+                      "expired": 0, "finished": 0, "kv_bytes_read": 0.0}
 
     # ------------------------------------------------------------ dispatches
-    def _build_decode(self, deq, data_parallel: bool, mesh):
+    def _build_decode(self, deq, data_parallel: bool, tensor_parallel: bool,
+                      mesh):
+        if tensor_parallel:
+            return self._build_tp_decode(deq, mesh)
         if self.kv_block_size:
             return jax.jit(
                 lambda pt, cache, tok, pos, tbl: self.model.decode_step(
                     deq(pt), cache, tok, pos, block_table=tbl,
-                    kv_gather=self.kv_gather))
+                    kv_gather=self.kv_gather,
+                    decode_kernel=self.decode_kernel),
+                donate_argnums=(1,))
 
         def step(pt, cache, tok, pos):
             return self.model.decode_step(deq(pt), cache, tok, pos)
 
         if not data_parallel:
-            return jax.jit(step)
+            return jax.jit(step, donate_argnums=(1,))
         from jax.experimental.shard_map import shard_map
         from jax.sharding import Mesh, PartitionSpec as P
         if mesh is None:
@@ -230,7 +310,68 @@ class ServeEngine:
                        in_specs=(rep, row, P("data", None), P("data")),
                        out_specs=(P("data", None, None), row),
                        check_rep=False)
-        return jax.jit(fn)
+        return jax.jit(fn, donate_argnums=(1,))
+
+    def _build_tp_decode(self, deq, mesh):
+        """Tensor-parallel decode (DESIGN.md 16.3): heads and FFN columns
+        shard over the mesh axis; each device runs the full decode step on
+        a HEAD/COLUMN-LOCAL model (a cfg with n_heads / n_kv_heads / d_ff
+        divided by the device count and head_dim pinned — head_dim_ is
+        otherwise derived from d_model // n_heads) and ``Model._tp_reduce``
+        psums the attention / FFN partial sums back to the full residual.
+
+        The KV cache shards on its Hkv dim — dim 3 of BOTH the contiguous
+        (L, n_slots, C, Hkv, hd) and the block-paged (L, NB, bs, Hkv, hd)
+        layouts — which is why tensor parallelism composes with block
+        paging: block ids stay a global (replicated) namespace, only the
+        head content splits.  Tokens / positions / block table replicate;
+        logits come out replicated (every device holds the psum result).
+
+        psum re-associates the wo / wd contraction, so logits match the
+        single-device route to float tolerance, not bitwise — TOKEN parity
+        is what the subprocess test asserts.
+        """
+        import dataclasses as _dc
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        cfg = self.cfg
+        if mesh is None:
+            mesh = Mesh(np.array(jax.devices()), ("model",))
+        ndev = mesh.devices.size
+        axis = mesh.axis_names[0]
+        for name in ("n_heads", "n_kv_heads", "d_ff"):
+            if getattr(cfg, name) % ndev:
+                raise ValueError(
+                    f"tensor-parallel decode needs {name}="
+                    f"{getattr(cfg, name)} divisible by {ndev} devices")
+        if cfg.dense_ff and cfg.dense_ff % ndev:
+            raise ValueError(
+                f"tensor-parallel decode needs dense_ff={cfg.dense_ff} "
+                f"divisible by {ndev} devices")
+        local_cfg = _dc.replace(
+            cfg, head_dim=cfg.head_dim_,
+            n_heads=cfg.n_heads // ndev,
+            n_kv_heads=cfg.n_kv_heads // ndev,
+            d_ff=cfg.d_ff // ndev,
+            dense_ff=cfg.dense_ff // ndev if cfg.dense_ff else 0)
+        local = Model(local_cfg)
+        local.tp_axis = axis
+
+        def step(pt, cache, tok, pos, *tbl):
+            return local.decode_step(
+                deq(pt), cache, tok, pos,
+                block_table=tbl[0] if tbl else None,
+                kv_gather=self.kv_gather, decode_kernel=self.decode_kernel)
+
+        pspec = _tp_param_specs(self.params, axis)
+        head = jax.tree.map(lambda l: P(None, None, None, axis, None),
+                            self.cache.data)
+        in_specs = (pspec, head, P(), P())
+        if self.kv_block_size:
+            in_specs += (P(),)
+        fn = shard_map(step, mesh=mesh, in_specs=in_specs,
+                       out_specs=(P(), head), check_rep=False)
+        return jax.jit(fn, donate_argnums=(1,))
 
     def _draw_one(self, rid, step, logits):
         """Counted-PRNG temperature sample: key = f(seed, rid, token idx).
@@ -411,6 +552,36 @@ class ServeEngine:
             if len(r.out_tokens) >= r.stats["max_new_eff"]:
                 self._finish(slot, t_first)
 
+    def _decode_kv_bytes(self, pos) -> float:
+        """Analytic KV bytes one decode dispatch reads for its attention,
+        summed over every slot row in the fixed-shape batch (idle rows ride
+        along and their cache IS read).  Host-side pricing, not a
+        measurement — but it is exact for each route's access pattern:
+
+        * contiguous slab — the dense masked pass streams every slot's full
+          ``max_context`` row once;
+        * block pool, ``decode_kernel="dense"`` — gather reads the whole
+          table's blocks, writes the contiguous copy, and the dense pass
+          reads it back: 3x full-row traffic;
+        * ``"reference"`` — one pass over every table entry (the scan takes
+          all ``nb`` blocks, masked or not);
+        * ``"fused"`` — one pass over just ``ceil(len/bs)`` blocks per slot
+          (the effective-table remap collapses the masked tail into a
+          revisit), so bytes scale with the ACTUAL per-slot lengths.
+        """
+        C = self.max_context
+        clen = np.minimum(np.asarray(pos) + 1, C)
+        if not self.kv_block_size:
+            rows = C * clen.size
+        elif self.decode_kernel == "dense":
+            rows = 3 * C * clen.size
+        elif self.decode_kernel == "reference":
+            rows = C * clen.size
+        else:                                  # fused
+            bs = self.kv_block_size
+            rows = int(np.sum(-(-clen // bs) * bs))
+        return float(rows) * self._kv_row_bytes
+
     def _decode_step(self, now):
         """One decode token for EVERY decoding slot in a single fixed-shape
         dispatch.  Idle/prefilling slots ride along as dummy rows: their
@@ -445,6 +616,7 @@ class ServeEngine:
         self.stats["decode_s"] += dt
         self.stats["decode_steps"] += 1
         self.stats["decode_tokens"] += len(active)
+        self.stats["kv_bytes_read"] += self._decode_kv_bytes(pos)
         nxt = self._sample(lg, rids, steps)
         t_done = self._now(now)
         finished = []

@@ -30,6 +30,15 @@ def test_serve_launcher(capsys):
     assert "served 2 requests" in out
 
 
+def test_serve_launcher_fused_tensor_parallel(capsys):
+    from repro.launch.serve import main
+    main(["--arch", "qwen2-0.5b", "--reduced", "--requests", "2",
+          "--prompt-len", "4", "--max-new", "3", "--batch", "2",
+          "--context", "16", "--kv-block-size", "8",
+          "--decode-kernel", "fused", "--tensor-parallel"])
+    assert "served 2 requests" in capsys.readouterr().out
+
+
 def test_serve_launcher_quantized(capsys):
     from repro.launch.serve import main
     main(["--arch", "qwen2-0.5b", "--reduced", "--requests", "1",

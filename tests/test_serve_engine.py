@@ -480,10 +480,123 @@ def test_on_token_streaming_order(lm32):
             assert [t for _, t in seen[r.rid]] == r.out_tokens, engine
 
 
-def test_data_parallel_block_paged_raises(lm32):
-    """shard_map decode is contiguous-only: block paging + data_parallel is
-    an explicit configuration error, not silent fallback."""
+def test_data_parallel_block_paged_routes_to_tensor_parallel(lm32):
+    """data_parallel + kv_block_size no longer raises (the PR-8 guard):
+    slot-sharding still cannot index the global block pool, so the engine
+    routes the request to the head-sharded (tensor-parallel) decode — a
+    real sharded dispatch with identical greedy tokens."""
     cfg, m, params = lm32
-    with pytest.raises(ValueError, match="block"):
+    rng = np.random.default_rng(25)
+    prompts = [rng.integers(0, cfg.vocab, n) for n in (13, 4, 19, 7)]
+    _, plain = _serve(cfg, params, prompts, max_batch=2, max_context=32,
+                      prefill_chunk=6, kv_block_size=8)
+    eng, reqs = _serve(cfg, params, prompts, max_batch=2, max_context=32,
+                       prefill_chunk=6, kv_block_size=8, data_parallel=True)
+    assert eng.tensor_parallel
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in plain]
+
+
+# --------------------------- fused paged decode + tensor parallelism (PR 9)
+
+def test_decode_kernel_routes_token_parity(lm32):
+    """The acceptance case for decode_kernel: mixed prompt lengths,
+    non-dividing chunk size, several KV blocks per slot, slot churn — the
+    scan-reference and fused-kernel routes must emit bit-identical token
+    streams to the dense gather+masked-pass oracle (and the fused lane also
+    exercises the Pallas gather in the prefill path)."""
+    cfg, m, params = lm32
+    rng = np.random.default_rng(30)
+    prompts = [rng.integers(0, cfg.vocab, n) for n in (3, 17, 9, 22, 5, 13)]
+    _, dense = _serve(cfg, params, prompts, max_batch=3, max_context=32,
+                      prefill_chunk=5, prefill_batch=2, kv_block_size=8,
+                      max_new=8)
+    want = [r.out_tokens for r in dense]
+    for kern, gather in (("reference", "take"), ("fused", "take"),
+                         ("fused", "pallas")):
+        eng, reqs = _serve(cfg, params, prompts, max_batch=3, max_context=32,
+                           prefill_chunk=5, prefill_batch=2, kv_block_size=8,
+                           decode_kernel=kern, kv_gather=gather, max_new=8)
+        assert [r.out_tokens for r in reqs] == want, (kern, gather)
+        assert eng.cache.n_free_blocks == eng.cache.n_blocks, kern
+
+
+def test_decode_kernel_needs_block_pool(lm32):
+    """reference/fused read the block pool directly — contiguous caches
+    have no pool, so the combination is a configuration error."""
+    cfg, m, params = lm32
+    with pytest.raises(ValueError, match="kv_block_size"):
         ServeEngine(cfg, params, max_batch=2, max_context=32,
-                    kv_block_size=8, data_parallel=True)
+                    decode_kernel="fused")
+
+
+def test_cache_donation_frees_old_buffers(lm32):
+    """Both jitted dispatches donate the KV-cache pytree: after a step, the
+    PREVIOUS cache buffers must be deleted (updated in place), not left
+    live alongside the new ones — the live-buffer regression that doubles
+    resident KV."""
+    cfg, m, params = lm32
+    for kw in (dict(), dict(kv_block_size=8)):
+        eng = ServeEngine(cfg, params, eos_id=-1, max_batch=2,
+                          max_context=32, prefill_chunk=4, **kw)
+        for r in _reqs([np.arange(1, 9)], max_new=4):
+            eng.submit(r)
+        old = jax.tree.leaves(eng.cache.data)
+        eng.step()                                 # prefill dispatch donates
+        assert all(x.is_deleted() for x in old), kw
+        old = jax.tree.leaves(eng.cache.data)
+        eng.step()                                 # decode dispatch donates
+        assert all(x.is_deleted() for x in old), kw
+        while eng.queue or eng.slots:
+            eng.step()
+
+
+_TP_SCRIPT = r"""
+import dataclasses
+import jax
+import numpy as np
+from repro.nn import Model, get_config
+from repro.runtime.serve import Request, ServeEngine
+assert jax.device_count() == 4
+# MHA variant: 4 devices must divide n_kv_heads (reduced() gives 2)
+cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(), n_layers=2,
+                          vocab=64, remat=False, dtype="float32",
+                          n_kv_heads=4)
+m = Model(cfg)
+params = m.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab, 3 + 5 * i) for i in range(5)]
+def serve(**kw):
+    eng = ServeEngine(cfg, params, max_batch=4, max_context=32, eos_id=-1,
+                      prefill_chunk=4, prefill_batch=2, **kw)
+    reqs = [Request(rid=i, prompt=np.asarray(p, np.int32), max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    eng.run(reqs)
+    return [r.out_tokens for r in reqs]
+base = serve()
+assert serve(tensor_parallel=True) == base, "tp contiguous"
+assert serve(tensor_parallel=True, kv_block_size=8) == base, "tp block"
+assert serve(tensor_parallel=True, kv_block_size=8,
+             decode_kernel="fused") == base, "tp fused"
+assert serve(data_parallel=True, kv_block_size=8) == base, "dp+block reroute"
+try:
+    ServeEngine(dataclasses.replace(cfg, n_kv_heads=2), params, max_batch=4,
+                tensor_parallel=True)
+except ValueError:
+    print("TP-DIV-GUARD-OK")
+print("TP-OK")
+"""
+
+
+def test_tensor_parallel_decode_parity():
+    """Head-sharded shard_map decode over 4 forced host devices emits
+    token streams bit-identical to the single-device route — contiguous,
+    block-paged, block-paged + fused kernel, and the data_parallel+block
+    reroute (psum re-associates logits, so parity is on TOKENS)."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", _TP_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "TP-OK" in out.stdout and "TP-DIV-GUARD-OK" in out.stdout
