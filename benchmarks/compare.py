@@ -1,25 +1,29 @@
 """Diff fresh benchmark artifacts against the committed baseline.
 
-``python -m benchmarks.compare BENCH_serve.json BENCH_mixedbw.json``
+``python -m benchmarks.compare BENCH_serve.json BENCH_mixedbw.json
+BENCH_autotune.json``
 
 For each artifact the working-tree copy is the CANDIDATE and
 ``git show HEAD:<path>`` is the BASELINE.  Lanes are matched by their
 identity fields (every non-numeric lane key: ``quant``, ``rate_rps``,
-``prefill_batch``, ``lane``, ...) and every shared numeric metric is
-printed as ``baseline -> candidate (delta, pct)``.  The tool is
-REPORT-ONLY: it always exits 0.  Guard rails, not gates — unless ``--fail-threshold PCT`` is passed, which
-turns p99 latency regressions beyond PCT percent into a non-zero exit (the
-opt-in gate; CI runs it as a separate non-blocking step).  Other guard
-rails:
+``prefill_batch``, ``lane``, ``op``, ...) and every shared numeric metric
+is printed as ``baseline -> candidate (delta, pct)``; shared string
+metrics that changed (e.g. an autotune lane's measured ``winner``) are
+reported too.  The tool is REPORT-ONLY: it always exits 0.  Guard rails,
+not gates — unless ``--fail-threshold PCT`` is passed, which turns p99
+latency regressions beyond PCT percent into a non-zero exit (the opt-in
+gate; CI runs it as a separate non-blocking step).  Other guard rails:
 
 * differing ``config_hash`` means the runs are not like-for-like; the
   file is skipped with a note instead of printing misleading deltas
   (missing hashes on either side compare as unknown and are allowed
   through, flagged);
-* a lane present on only one side is listed as added/removed;
-* a missing baseline (file not committed yet) or missing candidate is a
-  note, not an error, so CI can run this on the very first PR that adds
-  an artifact.
+* a lane present only in the candidate is reported as ``NEW`` with its
+  metric values (not a confusing empty diff); one present only in the
+  baseline as removed;
+* a missing baseline (file not committed yet) lists every candidate lane
+  as ``NEW``; a missing candidate is a note, not an error, so CI can run
+  this on the very first PR that adds an artifact.
 """
 from __future__ import annotations
 
@@ -42,10 +46,13 @@ def _load_baseline(path: str):
 
 
 # fields that NAME a lane rather than measure it; everything else numeric
-# is treated as a metric and diffed
+# is treated as a metric and diffed (plus non-identity strings, reported
+# when they change — the autotune lanes' measured "winner")
 _IDENTITY = ("lane", "quant", "rate_rps", "prefill_batch", "kv_block_size",
              "kv_gather", "decode_kernel", "long_prompts", "n_requests",
-             "structure", "arch")
+             "structure", "arch",
+             # BENCH_autotune.json lane identity (DESIGN.md 17)
+             "op", "platform", "shape_bucket", "dtype")
 
 
 def _lane_key(lane: dict):
@@ -56,6 +63,24 @@ def _lane_key(lane: dict):
 def _numeric_items(lane: dict):
     return {k: float(v) for k, v in lane.items()
             if isinstance(v, (int, float)) and not isinstance(v, bool)}
+
+
+def _string_items(lane: dict):
+    """Non-identity string fields — measured RESULTS like an autotune
+    lane's ``winner``/``source``, diffed as changes rather than deltas."""
+    return {k: v for k, v in lane.items()
+            if isinstance(v, str) and k not in _IDENTITY}
+
+
+def _new_lane_lines(key, lane: dict) -> list[str]:
+    """A lane with no baseline: report it as NEW with its values, so the
+    first PR that adds a lane shows real numbers instead of an empty diff."""
+    out = [f"  + NEW lane: {_fmt_key(key)}"]
+    for m, v in sorted(_numeric_items(lane).items()):
+        out.append(f"      {m}: {v:g}")
+    for m, v in sorted(_string_items(lane).items()):
+        out.append(f"      {m}: {v}")
+    return out
 
 
 def _fmt_key(key) -> str:
@@ -78,7 +103,9 @@ def compare_file(path: str,
         return out, failures
     base = _load_baseline(path)
     if base is None:
-        out.append("  no committed baseline at HEAD; nothing to compare")
+        out.append("  no committed baseline at HEAD; every lane is NEW")
+        for lane in cand.get("lanes", []):
+            out.extend(_new_lane_lines(_lane_key(lane), lane))
         return out, failures
     bh, ch = base.get("config_hash"), cand.get("config_hash")
     if bh is not None and ch is not None and bh != ch:
@@ -97,11 +124,15 @@ def compare_file(path: str,
     clanes = {_lane_key(l): l for l in cand.get("lanes", [])}
     for key in blanes.keys() - clanes.keys():
         out.append(f"  - removed lane: {_fmt_key(key)}")
-    for key in clanes.keys() - blanes.keys():
-        out.append(f"  + new lane: {_fmt_key(key)}")
+    for key in sorted(clanes.keys() - blanes.keys()):
+        out.extend(_new_lane_lines(key, clanes[key]))
     for key in sorted(blanes.keys() & clanes.keys()):
         bl, cl = _numeric_items(blanes[key]), _numeric_items(clanes[key])
         out.append(f"  lane {_fmt_key(key)}")
+        bs_, cs_ = _string_items(blanes[key]), _string_items(clanes[key])
+        for m in sorted(bs_.keys() & cs_.keys()):
+            if bs_[m] != cs_[m]:
+                out.append(f"    {m}: {bs_[m]} -> {cs_[m]} (changed)")
         for m in sorted(bl.keys() & cl.keys()):
             b, c = bl[m], cl[m]
             d = c - b
@@ -120,7 +151,8 @@ def main(argv=None) -> int:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("paths", nargs="*",
-                    default=["BENCH_serve.json", "BENCH_mixedbw.json"])
+                    default=["BENCH_serve.json", "BENCH_mixedbw.json",
+                             "BENCH_autotune.json"])
     ap.add_argument("--fail-threshold", type=float, default=None,
                     metavar="PCT",
                     help="exit non-zero if any p99 latency metric regresses "

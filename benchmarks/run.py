@@ -827,6 +827,184 @@ def bench_mixedbw():
     return rows
 
 
+def bench_autotune():
+    """Measured-dispatch lane (DESIGN.md 17): race the candidate
+    implementations behind every ``auto`` knob, assert the bit-identical-
+    candidates contract on each race AND under a forced cache pick per
+    selection point, fill + persist the dispatch cache
+    (``BENCH_autotune_cache.json``, the CI artifact a TPU runner would
+    seed real winners into), and write ``BENCH_autotune.json`` — per-key
+    candidate timings, picked winner, and speedup vs the static heuristic
+    — so the repo accumulates a perf trajectory across PRs.  Off-TPU the
+    all-Pallas races (csd_qsweep tilings, the fused decode kernel) are
+    excluded rather than timed through the interpreter; those lanes report
+    ``source=heuristic``."""
+    import dataclasses
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro import tune
+    from repro.core.quantize import quantize_mlp
+    from repro.eval import BatchedHWEvaluator, Candidate, QSweepEvaluator
+    from repro.eval.batched import TMStep
+    from repro.kernels import csd_expand_stack, csd_qsweep
+    from repro.nn import Model, get_config
+    from repro.runtime.serve import Request, ServeEngine
+    from repro.tune.cache import DispatchCache
+
+    plat = tune.platform()
+    n_val = 96 if SMOKE else 512
+    reps = 2 if SMOKE else 5
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 101, (n_val, 16)).astype(np.int64)
+    y = rng.integers(0, 10, (n_val,)).astype(np.int64)
+    ws = [rng.standard_normal((16, 16)) * 0.4,
+          rng.standard_normal((16, 10)) * 0.4]
+    bs = [rng.standard_normal((16,)) * 0.1, rng.standard_normal((10,)) * 0.1]
+    mlp = quantize_mlp(ws, bs, ("htanh", "hsig"), 4)
+    mlps = [quantize_mlp(ws, bs, ("htanh", "hsig"), q) for q in (3, 4, 5)]
+
+    cache = DispatchCache(tune.default_config())
+    rows, lanes = [], []
+
+    def run_race(op, shape, dtype, thunks, heuristic):
+        winner, timings = tune.race(thunks, platform=plat, warmup=1, k=reps)
+        measured = {n: t for n, t in timings.items() if t is not None}
+        if winner is not None:
+            cache.put(tune.make_key(plat, op, tune.shape_bucket(shape),
+                                    dtype),
+                      winner, timings=timings, candidates=list(thunks))
+        pick = winner if winner is not None else heuristic
+        speedup = (measured[heuristic] / measured[pick]
+                   if pick in measured and measured.get(heuristic)
+                   and measured[pick] > 0 else None)
+        lane = {"lane": "autotune", "op": op, "platform": plat,
+                "shape_bucket": tune.shape_bucket(shape), "dtype": dtype,
+                "winner": pick, "heuristic": heuristic,
+                "source": "measured" if winner is not None else "heuristic",
+                "n_candidates": len(thunks), "n_measured": len(measured)}
+        if speedup is not None:
+            lane["speedup_vs_heuristic"] = speedup
+        for name, t in measured.items():
+            lane[f"t_{name}_us"] = t * 1e6
+        lanes.append(lane)
+        rows.append((f"autotune/{op}", (measured.get(pick) or 0.0) * 1e6,
+                     f"winner={pick};heuristic={heuristic};"
+                     f"measured={len(measured)}/{len(thunks)}"
+                     + (f";speedup={speedup:.2f}x" if speedup else "")))
+
+    def forced(op, shape, dtype, winner):
+        """A one-entry cache forcing a NON-heuristic pick for *op*."""
+        c = DispatchCache(tune.default_config())
+        c.put(tune.make_key(plat, op, tune.shape_bucket(shape), dtype),
+              winner)
+        return c
+
+    # 1. QSweepEvaluator backend -------------------------------------------
+    sweep_heur = "numpy" if jax.default_backend() == "cpu" else "jnp"
+    ref_counts = QSweepEvaluator(x, y, backend="numpy").evaluate(mlps)
+    assert QSweepEvaluator(x, y, backend="jnp").evaluate(mlps) \
+        == ref_counts, "qsweep backend candidates must be bit-identical"
+    run_race("qsweep_backend", x.shape, "int64",
+             tune.qsweep_backend_thunks(x, y), sweep_heur)
+    with tune.use_cache(forced("qsweep_backend", x.shape, "int64", "jnp")):
+        ev = QSweepEvaluator(x, y)       # forced-pick decision parity
+        assert ev.backend == "jnp" and ev.evaluate(mlps) == ref_counts
+
+    # 2. BatchedHWEvaluator backend ----------------------------------------
+    bhw_heur = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    cands = [Candidate(layer=0, col=j, row=i,
+                       wnew=int(mlp.weights[0][i, j]) - 1)
+             for i in range(8) for j in range(8)]
+    ref_ha = BatchedHWEvaluator(mlp, x, y, backend="numpy").evaluate(cands)
+    assert BatchedHWEvaluator(mlp, x, y, backend="jnp").evaluate(cands) \
+        == ref_ha, "bhw backend candidates must be bit-identical"
+    run_race("bhw_backend", x.shape, "int64",
+             tune.bhw_backend_thunks(mlp, x, y), bhw_heur)
+    with tune.use_cache(forced("bhw_backend", x.shape, "int64", "numpy")):
+        ev = BatchedHWEvaluator(mlp, x, y)
+        assert ev.backend == "numpy" and ev.evaluate(cands) == ref_ha
+
+    # 3. TM decision-chain engine ------------------------------------------
+    ev = BatchedHWEvaluator(mlp, x, y, backend="jnp")
+    w0 = np.asarray(mlp.weights[0])
+    steps = [TMStep(layer=0, col=j, row=i,
+                    pws=(int(w0[i, j]) + 1, int(w0[i, j]) - 1), dbs=(-1, 1))
+             for i in range(4) for j in range(4)]
+    bha = ev.accuracy()
+    host_dec = ev.evaluate_tm_chain(steps, bha, engine="host")
+    assert ev.evaluate_tm_chain(steps, bha, engine="device") == host_dec, \
+        "tm chain engines must be bit-identical"
+    tm_heur = "device" if ev._chain_scan else "host"
+    tm_shape = (ev.n_val, len(steps))
+    run_race("tm_chain", tm_shape, "int64",
+             tune.tm_chain_thunks(ev, 0, steps), tm_heur)
+    with tune.use_cache(forced("tm_chain", tm_shape, "int64",
+                               "host" if tm_heur == "device" else "device")):
+        assert ev.evaluate_tm_chain(steps, bha) == host_dec
+
+    # 4. csd_qsweep tiling --------------------------------------------------
+    Q, M, K, N = (3, 128, 16, 128) if SMOKE else (4, 256, 16, 256)
+    tWs = [rng.integers(-31, 32, (K, N)) for _ in range(Q)]
+    planes = jnp.asarray(csd_expand_stack(tWs))
+    xq = jnp.asarray(rng.integers(-64, 64, (Q, M, K)).astype(np.int32))
+    tile_ref = np.asarray(csd_qsweep(xq, planes, bm=128, bn=128))
+    np.testing.assert_array_equal(
+        np.asarray(csd_qsweep(xq, planes, bm=64, bn=128)), tile_ref,
+        err_msg="csd_qsweep tilings must be bit-identical")
+    run_race("csd_qsweep_tiles", (Q, M, K, N), "int32",
+             tune.csd_qsweep_tile_thunks(xq, planes), tune.TILE_HEURISTIC)
+    with tune.use_cache(forced("csd_qsweep_tiles", (Q, M, K, N), "int32",
+                               "64x128")):
+        np.testing.assert_array_equal(np.asarray(csd_qsweep(xq, planes)),
+                                      tile_ref)
+
+    # 5. serving decode kernel ---------------------------------------------
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              n_layers=1, vocab=64, remat=False)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    dk_shape = (2, 64, 16)               # (max_batch, max_context, block)
+
+    def decode_run(kernel_cache):
+        with tune.use_cache(kernel_cache):
+            eng = ServeEngine(cfg, params, max_batch=2, max_context=64,
+                              eos_id=-1, prefill_chunk=16, kv_block_size=16,
+                              decode_kernel="auto", admission="truncate")
+        req = Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                      max_new_tokens=6)
+        eng.run([req])
+        return eng.decode_kernel, list(req.out_tokens)
+
+    k_dense, toks_dense = decode_run(DispatchCache(tune.default_config()))
+    k_fused, toks_fused = decode_run(
+        forced("decode_kernel", dk_shape, str(cfg.dtype), "fused"))
+    assert (k_dense, k_fused) == ("dense", "fused")
+    assert toks_dense == toks_fused, \
+        "decode kernels must be greedy-token-identical"
+    run_race("decode_kernel", dk_shape, str(cfg.dtype),
+             tune.decode_kernel_thunks(cfg, params, kv_block_size=16,
+                                       max_context=64), "dense")
+
+    # persist the measured winners (the artifact a real-hardware runner
+    # uploads; REPRO_TUNE_CACHE points later sessions at it)
+    cache.save("BENCH_autotune_cache.json")
+    econf = {"platform": plat, "n_val": n_val, "reps": reps,
+             "net": "16-16-10 q345", "tile_shape": [Q, M, K, N],
+             "tile_candidates": list(tune.TILE_CANDIDATES),
+             "decode_arch": "qwen2-0.5b (reduced, 1L, v64)",
+             "decode_shape": list(dk_shape),
+             "cache_config_hash": cache.config_hash(), "smoke": SMOKE}
+    with open("BENCH_autotune.json", "w") as f:
+        json.dump({"smoke": SMOKE, "seed": 0, "config": econf,
+                   "config_hash": _config_hash(econf),
+                   "cache_entries": len(cache.entries),
+                   "lanes": lanes}, f, indent=2)
+    rows.append(("autotune/report", 0.0,
+                 f"wrote=BENCH_autotune.json;lanes={len(lanes)};"
+                 f"cache_entries={len(cache.entries)}"))
+    return rows
+
+
 def bench_compression():
     import jax
     import jax.numpy as jnp
@@ -867,6 +1045,7 @@ SECTIONS = {
     "roofline": bench_roofline,
     "serving": bench_serving,
     "mixedbw": bench_mixedbw,
+    "autotune": bench_autotune,
     "compression": bench_compression,
     "ptq_decode": bench_ptq_decode,
 }

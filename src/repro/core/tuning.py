@@ -422,9 +422,10 @@ def tune_time_multiplexed(mlp: IntMLP, x_val_int: np.ndarray,
     ``chain_engine`` picks that pass's implementation: ``"host"`` (the
     sparsity-aware numpy chain — the CPU default), ``"device"`` (one
     ``lax.scan`` dispatch per run, so accelerator runs stop round-tripping
-    per group commit), or ``"auto"`` (device exactly where the evaluator's
-    chain scans already prefer it: TPU or sharded meshes).  All choices
-    are decision-identical."""
+    per group commit), or ``"auto"`` (the measured-dispatch cache's winner
+    for this platform/size neighbourhood when one exists — DESIGN.md 17 —
+    else device exactly where the evaluator's chain scans already prefer
+    it: TPU or sharded meshes).  All choices are decision-identical."""
     if engine == "serial":
         return _tune_tm_serial(mlp, x_val_int, y_val, scope=scope,
                                bias_range=bias_range, max_sweeps=max_sweeps)

@@ -505,9 +505,12 @@ class BatchedHWEvaluator:
           Falls back to the host chain when the backend is numpy, the int32
           composition guard fails, a step carries more than two candidate
           values, or steps disagree on the nudge schedule.
-        * ``"auto"`` — ``device`` exactly where the serial chain scan
-          already prefers the device (TPU backend or a sharded mesh),
-          ``host`` otherwise.
+        * ``"auto"`` — the measured-dispatch cache's winner for this
+          (platform, rows x steps) neighbourhood when one exists
+          (DESIGN.md 17); on a miss, the static rule: ``device`` exactly
+          where the serial chain scan already prefers the device (TPU
+          backend or a sharded mesh), ``host`` otherwise.  Both engines
+          are bit-identical, so the pick only moves wall-clock.
 
         Both engines produce bit-identical decisions (asserted in tests).
         """
@@ -528,8 +531,15 @@ class BatchedHWEvaluator:
         if ha_pct(self._count, self.n_val) != bha:
             raise ValueError("bha must equal the committed network's "
                              "accuracy (greedy invariant)")
-        use_device = (engine == "device"
-                      or (engine == "auto" and self._chain_scan))
+        use_device = engine == "device"
+        if engine == "auto":
+            from repro import tune
+            pick = tune.decide(
+                "tm_chain", shape=(self.n_val, len(steps)), dtype="int64",
+                candidates=("host", "device"),
+                heuristic=("device" if self._chain_scan else "host"),
+                measure=lambda: tune.tm_chain_thunks(self, k, steps))
+            use_device = pick == "device"
         decisions = None
         if use_device:
             decisions, n_evals = self._tm_chain_device(k, steps)
@@ -775,8 +785,19 @@ class BatchedHWEvaluator:
         if backend == "auto":
             try:
                 import jax
-                backend = ("pallas" if jax.default_backend() == "tpu"
-                           else "jnp")
+                # measured dispatch (DESIGN.md 17): cached race winner for
+                # this (platform, shape) neighbourhood if present, else the
+                # static rule (pallas shift-add datapath on TPU, jnp's
+                # int32 dot_general elsewhere)
+                from repro import tune
+                mlp, n = self._mlp, self.n_val
+                x, lab = self._x[:n], self._labels[:n]
+                backend = tune.decide(
+                    "bhw_backend", shape=(n,) + self._x.shape[1:],
+                    dtype="int64", candidates=("numpy", "jnp", "pallas"),
+                    heuristic=("pallas" if jax.default_backend() == "tpu"
+                               else "jnp"),
+                    measure=lambda: tune.bhw_backend_thunks(mlp, x, lab))
             except Exception:                              # pragma: no cover
                 self.backend = "numpy"
                 return
@@ -1048,10 +1069,21 @@ class QSweepEvaluator:
                 import jax
                 jax.devices()
                 if backend == "auto":
-                    # on CPU hosts the stacked BLAS-float64 path (exact below
-                    # 2^53) beats XLA's int32 matmuls — DESIGN.md 10
-                    self.backend = ("numpy" if jax.default_backend() == "cpu"
-                                    else "jnp")
+                    # measured dispatch (DESIGN.md 17): a cached race winner
+                    # if one exists for this (platform, shape) neighbourhood,
+                    # else the static rule — on CPU hosts the stacked
+                    # BLAS-float64 path (exact below 2^53) beats XLA's int32
+                    # matmuls (DESIGN.md 10), accelerators get the jnp tier
+                    from repro import tune
+                    xs, ys = x_val_int, labels
+                    self.backend = tune.decide(
+                        "qsweep_backend", shape=x_val_int.shape,
+                        dtype="int64",
+                        candidates=("numpy", "jnp", "pallas"),
+                        heuristic=("numpy"
+                                   if jax.default_backend() == "cpu"
+                                   else "jnp"),
+                        measure=lambda: tune.qsweep_backend_thunks(xs, ys))
                 else:
                     self.backend = backend    # jnp, or the digit-plane
             except Exception:                 # pallas sweep mode (11.4)

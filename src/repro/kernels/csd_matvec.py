@@ -21,30 +21,19 @@ these kernels' value is bit-exact *hardware simulation*, not TPU roofline
 kernel); the D digit planes are accumulated inside the kernel body with
 shifts applied as exact integer scaling.
 
-``csd_expand`` is re-exported here for backward compatibility only — the
-public path is :mod:`repro.kernels` (``repro.kernels.ops``), which backs it
-with the whole-array CSD recoder (DESIGN.md 11.1).
+The digit-plane expansion itself lives at :func:`repro.kernels.csd_expand`
+(``repro.kernels.ops``), backed by the whole-array CSD recoder
+(DESIGN.md 11.1).
 """
 from __future__ import annotations
 
 import functools
-import warnings
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["csd_expand", "csd_matvec_kernel", "csd_matvec",
-           "csd_qsweep_kernel"]
-
-
-def csd_expand(w_int):
-    """Deprecated import path — use :func:`repro.kernels.csd_expand`."""
-    warnings.warn("repro.kernels.csd_matvec.csd_expand is deprecated; "
-                  "import csd_expand from repro.kernels",
-                  DeprecationWarning, stacklevel=2)
-    from repro.kernels.ops import csd_expand as _expand
-    return _expand(w_int)
+__all__ = ["csd_matvec_kernel", "csd_matvec", "csd_qsweep_kernel"]
 
 
 def _kernel(x_ref, p_ref, o_ref, *, n_digits: int):

@@ -28,8 +28,8 @@ def csd_expand(w_int, depth: int | None = None) -> np.ndarray:
     """(n, m) integer matrix -> (D, n, m) int8 CSD digit planes, LSB first.
 
     The single public digit-plane expansion (``repro.kernels`` is the
-    canonical import path; the old ``kernels.csd_matvec.csd_expand`` is a
-    deprecation shim).  Backed by the whole-array CSD recoder
+    canonical import path; the old ``kernels.csd_matvec.csd_expand`` shim
+    is gone).  Backed by the whole-array CSD recoder
     (``repro.core.csd.to_csd_array``, DESIGN.md 11.1) — bit-identical to the
     seed's per-value recoding loop.  ``depth`` pads the plane stack to a
     common D (the sweep kernel's per-network stacking needs aligned depths).
@@ -107,7 +107,7 @@ def csd_matvec(x_int, w_int=None, planes=None, *, bm: int = 128,
     return y[:M, :N]
 
 
-def csd_qsweep(x_int, planes, *, bm: int = 128, bn: int = 128,
+def csd_qsweep(x_int, planes, *, bm: int | None = None, bn: int | None = None,
                interpret: bool | None = None):
     """Sweep-mode shift-add matvec: y[q] = x[q] @ W[q] via stacked CSD digit
     planes, every q level in one dispatch (DESIGN.md 11.4).
@@ -117,11 +117,27 @@ def csd_qsweep(x_int, planes, *, bm: int = 128, bn: int = 128,
     shallower networks — zero planes add nothing).  Exact int32, like
     :func:`csd_matvec`, provided every network satisfies the sweep engine's
     CSD accumulator bound (``repro.eval.batched.csd_net_accum_bound``).
+
+    ``bm``/``bn`` default to the measured-dispatch cache's winning tiling
+    for this shape neighbourhood (DESIGN.md 17), falling back to the
+    historical 128x128 constants on a miss.  Any tiling is bit-identical
+    (K stays whole per block; bm/bn only partition the output grid), so
+    the pick can never change results — this is safe at trace time too
+    (shapes are static under jit; the cache is consult-only here, the
+    ``--only autotune`` lane does the filling outside any trace).
     """
     if interpret is None:
         interpret = not _on_tpu()
     Q, M, K = x_int.shape
     N = planes.shape[3]
+    if bm is None or bn is None:
+        from repro import tune
+        tbm, tbn = tune.parse_tile(tune.decide(
+            "csd_qsweep_tiles", shape=(Q, M, K, N), dtype="int32",
+            candidates=tune.TILE_CANDIDATES,
+            heuristic=tune.TILE_HEURISTIC))
+        bm = tbm if bm is None else bm
+        bn = tbn if bn is None else bn
     xq = _pad_to(x_int.astype(jnp.int32), bm, 1)
     pq = _pad_to(planes, bn, 3)
     y = csd_qsweep_kernel(xq, pq, bm=min(bm, xq.shape[1]), bn=bn,

@@ -47,11 +47,12 @@ def main(argv=None):
                     default="take",
                     help="block-table gather route (block-paged mode only)")
     ap.add_argument("--decode-kernel",
-                    choices=("dense", "reference", "fused"),
+                    choices=("auto", "dense", "reference", "fused"),
                     default="dense",
                     help="decode attention route (block-paged mode only): "
-                         "gather+dense oracle, scan reference, or the "
-                         "fused Pallas paged-attention kernel")
+                         "gather+dense oracle, scan reference, the fused "
+                         "Pallas paged-attention kernel, or auto (the "
+                         "measured-dispatch cache's winner, DESIGN.md 17)")
     ap.add_argument("--tensor-parallel", action="store_true",
                     help="shard attention heads + FFN over all devices "
                          "(composes with --kv-block-size)")

@@ -180,6 +180,22 @@ class ServeEngine:
                 f"{cfg.family!r} — use ReferenceEngine")
         if kv_gather not in ("take", "pallas"):
             raise ValueError(f"unknown kv_gather {kv_gather!r}")
+        if decode_kernel == "auto":
+            # measured dispatch (DESIGN.md 17): the cached race winner for
+            # this (platform, batch x context x block) neighbourhood, else
+            # the static "dense" rule.  Consult-only — the autotune bench
+            # lane does the measuring; both kernels are bit-identical
+            # (DESIGN.md 16), so the pick only moves wall-clock.  Without a
+            # block pool only the gather+dense route exists at all.
+            if kv_block_size:
+                from repro import tune
+                decode_kernel = tune.decide(
+                    "decode_kernel",
+                    shape=(max_batch, max_context, kv_block_size),
+                    dtype=str(cfg.dtype), candidates=("dense", "fused"),
+                    heuristic="dense")
+            else:
+                decode_kernel = "dense"
         if decode_kernel not in ("dense", "reference", "fused"):
             raise ValueError(f"unknown decode_kernel {decode_kernel!r}")
         if decode_kernel != "dense" and not kv_block_size:

@@ -1,0 +1,40 @@
+"""Measured-dispatch autotuning (DESIGN.md 17).
+
+The paper's thesis — realizations should be chosen by measured cost, not
+fixed heuristics — applied to this repo's own engine knobs.  Every
+``auto`` selection point (evaluator backends, the TM chain engine,
+csd_qsweep tilings, the serving decode kernel) consults one persistent
+cache of race winners via :func:`decide`; a miss falls back to the exact
+pre-autotuner static heuristic, and measure-and-fill only runs when
+:func:`enabled` (the ``REPRO_TUNE`` env var or a session override).
+
+    from repro import tune
+    backend = tune.decide("qsweep_backend", shape=x.shape, dtype="int64",
+                          candidates=("numpy", "jnp", "pallas"),
+                          heuristic="numpy",
+                          measure=lambda: tune.qsweep_backend_thunks(x, y))
+
+Candidates must already be proven bit-identical (or oracle-allclose) by
+tier-1 tests — the cache can only ever change wall-clock, never results.
+"""
+from .bench import Thunk, measure, race
+from .cache import (SCHEMA_VERSION, DispatchCache, config_hash, make_key,
+                    shape_bucket)
+from .dispatch import (ENV_CACHE, ENV_ENABLED, decide, default_config,
+                       enabled, get_cache, platform, set_cache, set_enabled,
+                       stats, use_cache)
+from .measurers import (TILE_CANDIDATES, TILE_HEURISTIC, bhw_backend_thunks,
+                        csd_qsweep_tile_thunks, decode_kernel_thunks,
+                        parse_tile, qsweep_backend_thunks, tm_chain_thunks)
+
+__all__ = [
+    "Thunk", "measure", "race",
+    "SCHEMA_VERSION", "DispatchCache", "config_hash", "make_key",
+    "shape_bucket",
+    "ENV_CACHE", "ENV_ENABLED", "decide", "default_config", "enabled",
+    "get_cache", "platform", "set_cache", "set_enabled", "stats",
+    "use_cache",
+    "TILE_CANDIDATES", "TILE_HEURISTIC", "parse_tile",
+    "qsweep_backend_thunks", "bhw_backend_thunks", "tm_chain_thunks",
+    "csd_qsweep_tile_thunks", "decode_kernel_thunks",
+]

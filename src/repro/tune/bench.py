@@ -1,0 +1,68 @@
+"""Microbenchmark harness for the measured-dispatch races (DESIGN.md 17.1).
+
+``measure`` times one callable — warmup runs first (jit tracing, device
+transfer, cache warming all land there), then the median of k timed runs on
+a monotonic clock.  Median, not mean: one GC pause or scheduler hiccup must
+not crown the wrong engine for the life of a cache entry.
+
+``race`` times a dict of named :class:`Thunk`s and returns the winner.  The
+interpret-mode rule lives here: a thunk flagged ``pallas=True`` executes
+through the Pallas *interpreter* off-TPU, so its timing measures the
+emulation, not the kernel — off-TPU those thunks are excluded from the race
+(timing ``None``) rather than recorded as honest losses.  A race whose
+thunks are ALL excluded returns no winner, so the caller's static heuristic
+stands and nothing is cached.
+
+The clock is injectable so the tests can drive deterministic races.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Mapping
+
+
+@dataclass
+class Thunk:
+    """One race entrant: ``run`` performs a single timed invocation and must
+    block until the work is done (``.block_until_ready()`` on jax values)."""
+    run: Callable[[], object]
+    pallas: bool = False       # runs through the Pallas interpreter off-TPU
+
+
+def measure(fn: Callable[[], object], *, warmup: int = 1, k: int = 5,
+            clock: Callable[[], float] = time.monotonic) -> float:
+    """Median of ``k`` timed calls after ``warmup`` untimed ones."""
+    for _ in range(max(0, warmup)):
+        fn()
+    ts = []
+    for _ in range(max(1, k)):
+        t0 = clock()
+        fn()
+        ts.append(clock() - t0)
+    ts.sort()
+    n = len(ts)
+    mid = n // 2
+    return float(ts[mid] if n % 2 else (ts[mid - 1] + ts[mid]) / 2.0)
+
+
+def race(thunks: Mapping[str, Thunk], *, platform: str,
+         warmup: int = 1, k: int = 5,
+         clock: Callable[[], float] = time.monotonic
+         ) -> tuple[str | None, dict[str, float | None]]:
+    """Time every eligible thunk; return ``(winner, timings)``.
+
+    ``timings[name]`` is the median seconds, or None when the thunk was
+    excluded (pallas off-TPU).  The winner is the fastest measured entrant,
+    ties broken by name so the result is deterministic; None when nothing
+    was eligible."""
+    timings: dict[str, float | None] = {}
+    for name, th in thunks.items():
+        if th.pallas and platform != "tpu":
+            timings[name] = None       # interpreter timing: not admissible
+            continue
+        timings[name] = measure(th.run, warmup=warmup, k=k, clock=clock)
+    measured = {n: t for n, t in timings.items() if t is not None}
+    winner = (min(measured, key=lambda n: (measured[n], n))
+              if measured else None)
+    return winner, timings

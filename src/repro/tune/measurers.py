@@ -1,0 +1,145 @@
+"""Thunk factories for the measured races behind each ``auto`` knob
+(DESIGN.md 17.5).
+
+One factory per selection point, each returning ``{candidate: Thunk}`` for
+:func:`repro.tune.bench.race`.  Factories are only invoked on a cache miss
+with tuning enabled (or by the ``--only autotune`` benchmark lane), so the
+hot paths never pay for the imports or the synthetic workloads here.
+
+Every candidate set is drawn from implementations the tier-1 suite already
+proves bit-identical (or oracle-allclose) — the DESIGN.md 17.4 contract:
+evaluator backends (numpy/jnp/pallas sweep parity tests), host vs device TM
+chains (chain-parity tests), csd_qsweep tilings (K stays whole per block;
+bm/bn only partition output tiles), and dense vs fused paged decode (the
+base-2 online-softmax bitwise contract).  A race can therefore pick any
+entrant without changing results — only wall-clock.
+"""
+from __future__ import annotations
+
+from .bench import Thunk
+
+# csd_qsweep tile grid: bn keeps the lane dimension a multiple of the VPU
+# lane width (last dim 128 — see the Pallas TPU tiling rules), bm sweeps
+# the sublane dim around the MXU's native 128
+TILE_CANDIDATES = ("64x128", "128x128", "128x256", "256x128", "256x256")
+TILE_HEURISTIC = "128x128"            # the pre-autotuner fixed constants
+
+
+def parse_tile(name: str) -> tuple[int, int]:
+    """"128x256" -> (bm, bn) = (128, 256)."""
+    bm, bn = name.split("x")
+    return int(bm), int(bn)
+
+
+def _block(v):
+    """Force async jax work to completion inside the timed region."""
+    if hasattr(v, "block_until_ready"):
+        v.block_until_ready()
+    return v
+
+
+def qsweep_backend_thunks(x_val_int, labels, *,
+                          backends=("numpy", "jnp", "pallas"),
+                          qs=(4, 5, 6, 7)):
+    """Race QSweepEvaluator backends on the caller's real validation split
+    with a synthetic 2-layer MLP quantized at a few q levels (the sweep
+    consumers' workload shape)."""
+    import numpy as np
+    from repro.core.quantize import quantize_mlp
+    from repro.eval.batched import QSweepEvaluator
+
+    x = np.asarray(x_val_int)
+    lab = np.asarray(labels)
+    n_cls = int(lab.max()) + 1 if lab.size else 2
+    rng = np.random.default_rng(0)
+    h = 16
+    ws = [rng.standard_normal((x.shape[1], h)) * 0.5,
+          rng.standard_normal((h, n_cls)) * 0.5]
+    bs = [rng.standard_normal((h,)) * 0.1,
+          rng.standard_normal((n_cls,)) * 0.1]
+    mlps = [quantize_mlp(ws, bs, ("htanh", "hsig"), q) for q in qs]
+    thunks = {}
+    for b in backends:
+        ev = QSweepEvaluator(x, lab, backend=b)
+        thunks[b] = Thunk(run=lambda ev=ev: ev.evaluate(mlps),
+                          pallas=(b == "pallas"))
+    return thunks
+
+
+def bhw_backend_thunks(mlp, x_val_int, labels, *,
+                       backends=("numpy", "jnp", "pallas"),
+                       n_cands: int = 64):
+    """Race BatchedHWEvaluator backends on the caller's committed network
+    and validation split with a first-layer candidate batch (the tuners'
+    workload shape)."""
+    import numpy as np
+    from repro.eval.batched import BatchedHWEvaluator, Candidate
+
+    w0 = np.asarray(mlp.weights[0])
+    cands = [Candidate(layer=0, col=int(c), row=int(r),
+                       wnew=int(w0[r, c]) - 1)
+             for r in range(w0.shape[0]) for c in range(w0.shape[1])]
+    cands = cands[:max(1, n_cands)]
+    thunks = {}
+    for b in backends:
+        ev = BatchedHWEvaluator(mlp, x_val_int, labels, backend=b)
+        thunks[b] = Thunk(run=lambda ev=ev: ev.evaluate(cands),
+                          pallas=(b == "pallas"))
+    return thunks
+
+
+def tm_chain_thunks(ev, layer: int, steps):
+    """Race the host vs device TM decision chains on the caller's OWN
+    evaluator and step list (both chains leave committed state untouched,
+    so racing them is free of side effects).  The device entrant is only
+    admitted when its contract probe holds — a chain that instantly returns
+    ``(None, 0)`` must not win by doing nothing."""
+    thunks = {"host": Thunk(run=lambda: ev._tm_chain_np(layer, steps))}
+    probe, _ = ev._tm_chain_device(layer, steps)
+    if probe is not None:
+        thunks["device"] = Thunk(
+            run=lambda: ev._tm_chain_device(layer, steps))
+    return thunks
+
+
+def csd_qsweep_tile_thunks(x_int, planes, *, interpret=None,
+                           candidates=TILE_CANDIDATES):
+    """Race (bm, bn) tilings of the digit-plane sweep kernel.  All entrants
+    are Pallas, so off-TPU the whole race is excluded (interpret timings
+    are inadmissible) and the static 128x128 heuristic stands."""
+    from repro.kernels import ops
+    thunks = {}
+    for name in candidates:
+        bm, bn = parse_tile(name)
+        thunks[name] = Thunk(
+            run=lambda bm=bm, bn=bn: _block(
+                ops.csd_qsweep(x_int, planes, bm=bm, bn=bn,
+                               interpret=interpret)),
+            pallas=True)
+    return thunks
+
+
+def decode_kernel_thunks(cfg, params, *, kv_block_size: int = 16,
+                         max_batch: int = 2, max_context: int = 64,
+                         prompt_len: int = 8, n_tokens: int = 8,
+                         candidates=("dense", "fused")):
+    """Race the paged engine's decode kernels (gather+dense vs the fused
+    block-paged Pallas attention) on a short greedy run.  The fused entrant
+    is Pallas, so off-TPU it is excluded and "dense" stands."""
+    import numpy as np
+    from repro.runtime.serve import Request, ServeEngine
+
+    thunks = {}
+    for kernel in candidates:
+        eng = ServeEngine(cfg, params, max_batch=max_batch,
+                          max_context=max_context, eos_id=-1,
+                          prefill_chunk=16, kv_block_size=kv_block_size,
+                          decode_kernel=kernel, admission="truncate")
+        prompt = np.arange(1, prompt_len + 1, dtype=np.int32) % cfg.vocab
+
+        def run(eng=eng, prompt=prompt):
+            eng.run([Request(rid=-1, prompt=prompt,
+                             max_new_tokens=n_tokens)])
+
+        thunks[kernel] = Thunk(run=run, pallas=(kernel == "fused"))
+    return thunks

@@ -1,0 +1,358 @@
+"""Measured-dispatch autotuner (DESIGN.md 17): cache round-trip and
+self-invalidation, deterministic races under an injected fake timer, the
+interpret-mode exclusion rule, and — the correctness contract — every
+``auto`` selection point falling back bit-identically to its static
+heuristic on a miss and honouring (without changing results under) a
+forced cache pick."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import tune
+from repro.tune.cache import DispatchCache, SCHEMA_VERSION
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------- cache
+
+
+def test_shape_bucket_and_key():
+    assert tune.shape_bucket((1124, 16)) == "2048x16"
+    assert tune.shape_bucket((1, 128, 129)) == "1x128x256"
+    assert tune.shape_bucket((0, 5)) == "0x8"
+    assert tune.make_key("cpu", "op", "2048x16", "int64") == \
+        "cpu|op|2048x16|int64"
+
+
+def test_cache_json_round_trip_exact(tmp_path):
+    cache = DispatchCache({"platform": "cpu"})
+    cache.put("cpu|op|64x16|int64", "numpy",
+              timings={"numpy": 0.1 + 0.2, "jnp": 1e-7, "pallas": None},
+              candidates=["numpy", "jnp", "pallas"])
+    cache.put("cpu|tm|8x2|", "host", source="measured")
+    path = tmp_path / "cache.json"
+    cache.save(str(path))
+    back = DispatchCache.load(str(path), config={"platform": "cpu"})
+    # exact: entries (including binary64 float timings) survive the trip
+    assert back.entries == cache.entries
+    assert back.config_hash() == cache.config_hash()
+    assert back.entries["cpu|op|64x16|int64"]["timings"]["numpy"] == 0.1 + 0.2
+
+
+def test_cache_schema_version_invalidation(tmp_path):
+    cache = DispatchCache({"platform": "cpu"})
+    cache.put("k", "numpy")
+    path = tmp_path / "cache.json"
+    cache.save(str(path))
+    doc = json.loads(path.read_text())
+    doc["schema_version"] = SCHEMA_VERSION + 1
+    path.write_text(json.dumps(doc))
+    back = DispatchCache.load(str(path), config={"platform": "cpu"})
+    assert back.entries == {}                  # stale: self-invalidated
+    assert back.stats["stale_dropped"] == 1
+
+
+def test_cache_config_hash_invalidation(tmp_path):
+    cache = DispatchCache({"platform": "tpu"})
+    cache.put("k", "pallas")
+    path = tmp_path / "cache.json"
+    cache.save(str(path))
+    # same schema, different environment: the tpu-measured entry must not
+    # leak into a cpu session
+    back = DispatchCache.load(str(path), config={"platform": "cpu"})
+    assert back.entries == {}
+    assert back.stats["stale_dropped"] == 1
+    # matching config adopts the entries unchanged
+    same = DispatchCache.load(str(path), config={"platform": "tpu"})
+    assert same.entries == cache.entries
+
+
+def test_cache_load_garbage_is_empty(tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text("{not json")
+    assert DispatchCache.load(str(path), config={}).entries == {}
+    path.write_text(json.dumps([1, 2, 3]))
+    assert DispatchCache.load(str(path), config={}).entries == {}
+
+
+# ---------------------------------------------------------------- bench
+
+
+class FakeClock:
+    """Scripted monotonic clock: each call returns the next value."""
+
+    def __init__(self, *vals):
+        self.vals = list(vals)
+
+    def __call__(self):
+        return self.vals.pop(0)
+
+
+def test_measure_median_with_fake_clock():
+    calls = []
+    # k=3 timed runs bracketed by (t0, t1) pairs: durations 5, 1, 9
+    clock = FakeClock(0, 5, 10, 11, 20, 29)
+    t = tune.measure(lambda: calls.append(1), warmup=2, k=3, clock=clock)
+    assert t == 5.0                      # median of {5, 1, 9}
+    assert len(calls) == 5               # 2 warmup + 3 timed
+
+
+def test_race_deterministic_winner_and_tie_break():
+    mk = lambda: tune.Thunk(run=lambda: None)  # noqa: E731
+    # slow=2s, fast=1s per timed run
+    clock = FakeClock(0, 2, 2, 4, 10, 11, 11, 12)
+    winner, timings = tune.race({"slow": mk(), "fast": mk()},
+                                platform="cpu", warmup=0, k=2, clock=clock)
+    assert winner == "fast"
+    assert timings == {"slow": 2.0, "fast": 1.0}
+    # exact tie: lexicographically first name wins (stable across runs)
+    clock = FakeClock(0, 1, 1, 2, 10, 11, 11, 12)
+    winner, _ = tune.race({"b": mk(), "a": mk()},
+                          platform="cpu", warmup=0, k=2, clock=clock)
+    assert winner == "a"
+
+
+def test_race_excludes_pallas_off_tpu():
+    ran = {"pallas": 0, "jnp": 0}
+    thunks = {
+        "pallas": tune.Thunk(
+            run=lambda: ran.__setitem__("pallas", ran["pallas"] + 1),
+            pallas=True),
+        "jnp": tune.Thunk(
+            run=lambda: ran.__setitem__("jnp", ran["jnp"] + 1)),
+    }
+    clock = FakeClock(*range(100))
+    winner, timings = tune.race(thunks, platform="cpu", warmup=0, k=1,
+                                clock=clock)
+    assert winner == "jnp"
+    assert timings["pallas"] is None     # excluded, never run
+    assert ran["pallas"] == 0 and ran["jnp"] == 1
+    # all-excluded race: no winner, so the caller's heuristic stands
+    winner, timings = tune.race({"pallas": thunks["pallas"]},
+                                platform="cpu", warmup=0, k=1, clock=clock)
+    assert winner is None and timings == {"pallas": None}
+
+
+# -------------------------------------------------------------- dispatch
+
+
+def test_decide_hit_miss_and_fill():
+    cache = DispatchCache({"platform": "cpu"})
+    with tune.use_cache(cache, measure=False):
+        # miss + disabled -> heuristic, nothing cached
+        pick = tune.decide("op", shape=(100, 16), dtype="int64",
+                           candidates=("a", "b"), heuristic="b")
+        assert pick == "b" and cache.entries == {}
+    # hit: the cached winner is used and measure is NEVER invoked
+    cache.put("cpu|op|128x16|int64", "a")
+    boom = lambda: (_ for _ in ()).throw(AssertionError("measured on hit"))  # noqa: E731
+    with tune.use_cache(cache, measure=True):
+        pick = tune.decide("op", shape=(100, 16), dtype="int64",
+                           candidates=("a", "b"), heuristic="b",
+                           plat="cpu", measure=boom)
+        assert pick == "a"
+    # a cached winner outside the candidate set is ignored (stale entry
+    # from an older candidate grid): heuristic fallback
+    with tune.use_cache(cache, measure=False):
+        pick = tune.decide("op", shape=(100, 16), dtype="int64",
+                           candidates=("b", "c"), heuristic="c",
+                           plat="cpu")
+        assert pick == "c"
+    # miss + enabled + measure -> race fills the cache
+    cache2 = DispatchCache({"platform": "cpu"})
+    mk = lambda: {"a": tune.Thunk(run=lambda: None),  # noqa: E731
+                  "b": tune.Thunk(run=lambda: None, pallas=True)}
+    with tune.use_cache(cache2, measure=True):
+        pick = tune.decide("op", shape=(100, 16), dtype="int64",
+                           candidates=("a", "b"), heuristic="b",
+                           plat="cpu", measure=mk)
+    assert pick == "a"
+    rec = cache2.entries["cpu|op|128x16|int64"]
+    assert rec["winner"] == "a" and rec["timings"]["b"] is None
+
+
+def test_decide_autosave_round_trip(tmp_path, monkeypatch):
+    path = tmp_path / "tunecache.json"
+    monkeypatch.setenv(tune.ENV_CACHE, str(path))
+    monkeypatch.setenv(tune.ENV_ENABLED, "1")
+    tune.set_cache(None)                 # force a reload from the env path
+    tune.set_enabled(None)
+    try:
+        pick = tune.decide(
+            "op", shape=(8,), candidates=("x", "y"), heuristic="y",
+            measure=lambda: {"x": tune.Thunk(run=lambda: None)})
+        assert pick == "x"
+        assert path.exists()
+        doc = json.loads(path.read_text())
+        assert any(v["winner"] == "x" for v in doc["entries"].values())
+        # a fresh session with the same env adopts the persisted winner
+        tune.set_cache(None)
+        assert tune.decide("op", shape=(8,), candidates=("x", "y"),
+                           heuristic="y") == "x"
+    finally:
+        tune.set_cache(None)
+        tune.set_enabled(None)
+
+
+# ------------------------------- selection points: miss == old heuristic
+
+
+def _pendigits_like(n=96, k=16):
+    x = RNG.integers(0, 101, (n, k)).astype(np.int64)
+    y = RNG.integers(0, 10, (n,)).astype(np.int64)
+    return x, y
+
+
+def _small_mlp(k=16, h=8, c=10, q=4):
+    from repro.core.quantize import quantize_mlp
+    ws = [RNG.standard_normal((k, h)) * 0.3, RNG.standard_normal((h, c)) * 0.3]
+    bs = [RNG.standard_normal((h,)) * 0.1, RNG.standard_normal((c,)) * 0.1]
+    return quantize_mlp(ws, bs, ("htanh", "hsig"), q)
+
+
+def test_qsweep_auto_miss_matches_heuristic_and_forced_pick():
+    import jax
+    from repro.eval import QSweepEvaluator
+    x, y = _pendigits_like()
+    heur = "numpy" if jax.default_backend() == "cpu" else "jnp"
+    with tune.use_cache(DispatchCache(), measure=False):
+        ev = QSweepEvaluator(x, y)
+        assert ev.backend == heur        # empty cache -> today's static rule
+    # forced pick: a cache entry overrides the heuristic...
+    forced = DispatchCache({"platform": tune.platform()})
+    forced.put(tune.make_key(tune.platform(), "qsweep_backend",
+                             tune.shape_bucket(x.shape), "int64"), "jnp")
+    with tune.use_cache(forced, measure=False):
+        ev_jnp = QSweepEvaluator(x, y)
+        assert ev_jnp.backend == "jnp"
+    # ...and cannot change results (the bit-identical-candidates contract)
+    mlps = [_small_mlp(q=q) for q in (3, 4, 5)]
+    ev_ref = QSweepEvaluator(x, y, backend=heur)
+    assert ev_jnp.evaluate(mlps) == ev_ref.evaluate(mlps)
+
+
+def test_bhw_auto_miss_matches_heuristic_and_forced_pick():
+    import jax
+    from repro.eval import BatchedHWEvaluator, Candidate
+    x, y = _pendigits_like()
+    mlp = _small_mlp()
+    heur = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    with tune.use_cache(DispatchCache(), measure=False):
+        ev = BatchedHWEvaluator(mlp, x, y)
+        assert ev.backend == heur
+    forced = DispatchCache({"platform": tune.platform()})
+    forced.put(tune.make_key(tune.platform(), "bhw_backend",
+                             tune.shape_bucket(x.shape), "int64"), "numpy")
+    with tune.use_cache(forced, measure=False):
+        ev_np = BatchedHWEvaluator(mlp, x, y)
+        assert ev_np.backend == "numpy"
+    cands = [Candidate(layer=0, col=j, row=i,
+                       wnew=int(mlp.weights[0][i, j]) - 1)
+             for i in range(4) for j in range(4)]
+    ev_ref = BatchedHWEvaluator(mlp, x, y, backend=heur)
+    assert ev_np.evaluate(cands) == ev_ref.evaluate(cands)
+
+
+def test_tm_chain_auto_miss_matches_heuristic_and_forced_pick():
+    from repro.eval import BatchedHWEvaluator
+    from repro.eval.batched import TMStep
+    x, y = _pendigits_like()
+    mlp = _small_mlp()
+    ev = BatchedHWEvaluator(mlp, x, y, backend="jnp")
+    w0 = np.asarray(mlp.weights[0])
+    steps = [TMStep(layer=0, col=j, row=i,
+                    pws=(int(w0[i, j]) + 1, int(w0[i, j]) - 1),
+                    dbs=(-1, 1))
+             for i in range(3) for j in range(3)]
+    bha = ev.accuracy()
+    host = ev.evaluate_tm_chain(steps, bha, engine="host")
+    with tune.use_cache(DispatchCache(), measure=False):
+        auto = ev.evaluate_tm_chain(steps, bha)   # miss -> _chain_scan rule
+    assert auto == host
+    forced = DispatchCache({"platform": tune.platform()})
+    forced.put(tune.make_key(tune.platform(), "tm_chain",
+                             tune.shape_bucket((ev.n_val, len(steps))),
+                             "int64"), "device")
+    with tune.use_cache(forced, measure=False):
+        dev = ev.evaluate_tm_chain(steps, bha)    # forced device engine
+    assert dev == host                   # bit-identical decisions
+
+
+def test_csd_qsweep_default_tiles_match_heuristic_and_forced_pick():
+    import jax.numpy as jnp
+    from repro.kernels import csd_expand_stack, csd_qsweep
+    Q, M, K, N = 2, 24, 6, 10
+    Ws = [RNG.integers(-31, 32, (K, N)) for _ in range(Q)]
+    planes = jnp.asarray(csd_expand_stack(Ws))
+    x = jnp.asarray(RNG.integers(-64, 64, (Q, M, K)).astype(np.int32))
+    ref = np.asarray(csd_qsweep(x, planes, bm=128, bn=128))
+    with tune.use_cache(DispatchCache(), measure=False):
+        out = np.asarray(csd_qsweep(x, planes))   # miss -> 128x128
+    np.testing.assert_array_equal(out, ref)
+    forced = DispatchCache({"platform": tune.platform()})
+    forced.put(tune.make_key(tune.platform(), "csd_qsweep_tiles",
+                             tune.shape_bucket((Q, M, K, N)), "int32"),
+               "64x128")
+    with tune.use_cache(forced, measure=False):
+        out64 = np.asarray(csd_qsweep(x, planes))  # forced 64x128 tiling
+    np.testing.assert_array_equal(out64, ref)      # tiling can't change y
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    import jax
+    from repro.nn import Model, get_config
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              n_layers=1, vocab=64, remat=False)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_decode_kernel_auto_resolution(tiny_lm):
+    from repro.runtime.serve import ServeEngine
+    cfg, params = tiny_lm
+    with tune.use_cache(DispatchCache(), measure=False):
+        # no block pool: only the gather+dense route exists
+        eng = ServeEngine(cfg, params, max_batch=2, max_context=32,
+                          decode_kernel="auto")
+        assert eng.decode_kernel == "dense"
+        # block pool + empty cache: the static "dense" heuristic
+        eng = ServeEngine(cfg, params, max_batch=2, max_context=32,
+                          kv_block_size=8, decode_kernel="auto")
+        assert eng.decode_kernel == "dense"
+    forced = DispatchCache({"platform": tune.platform()})
+    forced.put(tune.make_key(tune.platform(), "decode_kernel",
+                             tune.shape_bucket((2, 32, 8)),
+                             str(cfg.dtype)), "fused")
+    with tune.use_cache(forced, measure=False):
+        eng = ServeEngine(cfg, params, max_batch=2, max_context=32,
+                          kv_block_size=8, decode_kernel="auto")
+        assert eng.decode_kernel == "fused"
+
+
+def test_decode_kernel_forced_pick_token_parity(tiny_lm):
+    from repro.runtime.serve import Request, ServeEngine
+    cfg, params = tiny_lm
+    prompt = np.arange(1, 7, dtype=np.int32)
+
+    def run(kernel_cache):
+        with tune.use_cache(kernel_cache, measure=False):
+            eng = ServeEngine(cfg, params, max_batch=2, max_context=32,
+                              eos_id=-1, prefill_chunk=8, kv_block_size=8,
+                              decode_kernel="auto", admission="truncate")
+        req = Request(rid=0, prompt=prompt, max_new_tokens=4)
+        eng.run([req])
+        return eng.decode_kernel, list(req.out_tokens)
+
+    k_dense, toks_dense = run(DispatchCache())
+    forced = DispatchCache({"platform": tune.platform()})
+    forced.put(tune.make_key(tune.platform(), "decode_kernel",
+                             tune.shape_bucket((2, 32, 8)),
+                             str(cfg.dtype)), "fused")
+    k_fused, toks_fused = run(forced)
+    assert (k_dense, k_fused) == ("dense", "fused")
+    # the decision-parity contract: a cache swap can never change tokens
+    assert toks_dense == toks_fused

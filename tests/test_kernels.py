@@ -104,15 +104,14 @@ def test_csd_expand_matches_scalar_recoder():
     assert not deeper[planes.shape[0]:].any()
 
 
-def test_csd_expand_old_import_path_deprecated():
-    import warnings
-    from repro.kernels.csd_matvec import csd_expand as old_expand
-    W = RNG.integers(-15, 16, (4, 4))
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        planes = old_expand(W)
-    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
-    np.testing.assert_array_equal(planes, csd_expand(W))
+def test_csd_expand_old_import_path_removed():
+    # the PR 3 deprecation shim is gone: the kernel module no longer
+    # exports csd_expand at all — repro.kernels is the only import path
+    from repro.kernels import csd_matvec as kernel_mod
+    assert not hasattr(kernel_mod, "csd_expand")
+    assert "csd_expand" not in kernel_mod.__all__
+    with pytest.raises(ImportError):
+        from repro.kernels.csd_matvec import csd_expand  # noqa: F401
 
 
 @pytest.mark.parametrize("Q,M,K,N", [(4, 128, 16, 128), (3, 70, 16, 10),
